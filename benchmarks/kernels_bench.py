@@ -1,0 +1,69 @@
+"""Kernel microbenches: wall time of the jnp reference paths (CPU) and
+derived TPU-roofline estimates for the Pallas kernels (which only run in
+interpret mode here, so wall clock is meaningless for them — the derived
+column reports the bandwidth/FLOP model instead).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reliability import encode_words
+from repro.core.tmr import vote_words
+from repro.models.attention import blocked_attention
+
+HBM_BW = 819e9
+PEAK = 197e12
+
+
+def _time(f, *args, iters=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / iters
+
+
+def run() -> list:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # ECC encode: memory-bound — bytes = buf + parity out
+    buf = jax.random.randint(key, (1 << 20,), 0, 1 << 30, jnp.int32).astype(jnp.uint32)
+    f = jax.jit(lambda b: encode_words(b))
+    us = _time(f, buf) * 1e6
+    bytes_moved = buf.nbytes * (1 + 3 / 32)
+    rows.append(("kernels.ecc_encode_4MiB", us,
+                 f"tpu_roofline_est={bytes_moved/HBM_BW*1e6:.1f}us (memory-bound)"))
+
+    # TMR vote: 3 reads 1 write
+    a = jax.random.randint(key, (1 << 20,), 0, 1 << 30, jnp.int32).astype(jnp.uint32)
+    fv = jax.jit(lambda a: vote_words(a, a, a))
+    us = _time(fv, a) * 1e6
+    rows.append(("kernels.tmr_vote_4MiB", us,
+                 f"tpu_roofline_est={4*a.nbytes/HBM_BW*1e6:.1f}us (memory-bound)"))
+
+    # flash attention fwd (jnp blocked path)
+    B, S, H, KV, hd = 1, 1024, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    fa = jax.jit(lambda q, k, v: blocked_attention(q, k, v, q_block=256, kv_block=256))
+    us = _time(fa, q, k, v) * 1e6
+    flops = 2 * B * H * (S * S / 2) * hd * 2
+    rows.append((f"kernels.flash_fwd_S{S}", us,
+                 f"tpu_roofline_est={flops/PEAK*1e6:.1f}us (compute-bound)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived}")

@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Run with:
+    PYTHONPATH=src python -m benchmarks.run [--only fig4_mult,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+sys.path.insert(0, "src")
+
+MODULES = ["fig4_mult", "fig4_nn", "fig5_weights", "ecc_overhead",
+           "tmr_tradeoff", "kernels_bench"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(MODULES))
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=[name])
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.3f},{derived}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name}.ERROR,0,{traceback.format_exc(limit=2)!r}", flush=True)
+        print(f"{name}.total_wall_s,{(time.time()-t0)*1e6:.0f},-", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

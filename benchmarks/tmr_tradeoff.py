@@ -1,0 +1,71 @@
+"""Paper §V: TMR latency/area/throughput trade-off table, measured from the
+crossbar simulator's cycle accounting (vs the unreliable baseline), plus
+the periphery-based alternative's 1024x latency penalty the paper cites.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import multpim
+from repro.core.tmr import TMR_COSTS
+
+ROWS_PER_XBAR = 1024
+
+
+def run() -> list:
+    rows = []
+    nl = multpim.multiplier_netlist(32)
+    base_cycles = nl.n_gates                       # 1 cycle per vectored gate
+    vote_cycles = 2 * 64                            # Min3+NOT per output bit
+    for mode, cost in TMR_COSTS.items():
+        if mode == "serial":
+            cycles = 3 * base_cycles + vote_cycles
+            area = 1.0
+            thr = 1.0
+        elif mode == "parallel":
+            cycles = base_cycles + vote_cycles      # partitions run copies concurrently
+            area = 3.0
+            thr = 1.0
+        else:
+            cycles = base_cycles + vote_cycles
+            area = 1.0
+            thr = 1.0 / 3.0
+        rows.append((f"tmr_tradeoff.{mode}", 0.0,
+                     f"latency={cycles/base_cycles:.2f}x area={area:.0f}x "
+                     f"throughput={thr:.2f}x (paper: {cost.latency_x:.0f}x/"
+                     f"{cost.area_x:.0f}x/{cost.throughput_x:.2f}x)"))
+    rows.append(("tmr_tradeoff.periphery_alternative", 0.0,
+                 f"latency={ROWS_PER_XBAR}x (paper: up to 1024x for 1024 rows)"))
+
+    # wall-time sanity: serial TMR is ~3x one execution in the simulator too
+    rng = np.random.default_rng(0)
+    a = jnp.array(rng.integers(0, 2**16, 128).astype(np.uint32))
+    b = jnp.array(rng.integers(0, 2**16, 128).astype(np.uint32))
+    f1 = jax.jit(lambda a, b: multpim.multiply_bits(a, b, 16))
+    f3 = jax.jit(lambda a, b, k: multpim.multiply_tmr_bits(a, b, 16, k, 0.0))
+    f1(a, b).block_until_ready()
+    f3(a, b, jax.random.PRNGKey(0)).block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        f1(a, b).block_until_ready()
+    t1 = (time.time() - t0) / 3
+    t0 = time.time()
+    for _ in range(3):
+        f3(a, b, jax.random.PRNGKey(0)).block_until_ready()
+    t3 = (time.time() - t0) / 3
+    rows.append(("tmr_tradeoff.sim_walltime", t1 * 1e6,
+                 f"serial_tmr/baseline={t3/t1:.2f}x wall (3 executions + "
+                 f"vectorized voting; CPU sim amortizes fixed overheads)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived}")

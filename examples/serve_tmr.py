@@ -1,0 +1,64 @@
+"""TMR-protected batched serving (paper §V at system scale).
+
+Serves batched requests from a small LM three ways: clean, with injected
+weight corruption (silent data corruption), and with TMR voting over three
+copies — showing the voted output matches the clean generation even when a
+copy is corrupted.
+
+Run: PYTHONPATH=src python examples/serve_tmr.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.reliability import inject_bit_flips
+from repro.core.tmr import vote_array
+from repro.models import params as P
+from repro.models import transformer as T
+from repro.models.steps import make_decode_step, make_prefill_step
+
+
+def main():
+    cfg = get_config("phi3-mini-3.8b").smoke().replace(compute_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = P.materialize(key, T.model_specs(cfg))
+    B, PROMPT, GEN = 4, 32, 24
+    batch = {"tokens": jax.random.randint(key, (B, PROMPT), 0, cfg.vocab)}
+
+    prefill = jax.jit(make_prefill_step(cfg, cache_len=PROMPT + GEN))
+    decode = jax.jit(make_decode_step(cfg))
+
+    def generate(p):
+        tok, _, cache = prefill(p, batch)
+        toks = [tok]
+        for _ in range(GEN - 1):
+            tok, _, cache = decode(p, tok, cache)
+            toks.append(tok)
+        return jnp.concatenate(toks, axis=1)
+
+    clean = generate(params)
+
+    p_bit = 3e-5
+    corrupted_params = inject_bit_flips(params, jax.random.fold_in(key, 1), p_bit)
+    corrupted = generate(corrupted_params)
+    n_diff = int((corrupted != clean).sum())
+    print(f"SDC demo: corrupting weights at p_bit={p_bit:g} changed "
+          f"{n_diff}/{clean.size} generated tokens — silently.")
+
+    # serial TMR: copy 2 is the corrupted replica
+    copies = [generate(params), generate(corrupted_params), generate(params)]
+    voted = vote_array(*copies)
+    print(f"TMR(serial, per-bit vote): voted output matches clean: "
+          f"{bool((voted == clean).all())}")
+    print("sample (clean): ", np.asarray(clean[0, :12]).tolist())
+    print("sample (corrupt):", np.asarray(corrupted[0, :12]).tolist())
+    print("sample (voted):  ", np.asarray(voted[0, :12]).tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with the full production substrate — synthetic data pipeline, AdamW,
+atomic checkpointing, straggler monitoring, ECC-protected weights with
+periodic scrubbing under injected soft errors, and a simulated preemption
+mid-run that the loop recovers from.
+
+Default is a CPU-sized model; --full-100m builds an actual 100M-parameter
+config (slower on CPU; the code path is identical).
+
+Run: PYTHONPATH=src python examples/train_reliable_lm.py --steps 300
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data.synthetic import SyntheticLM
+from repro.models import params as P
+from repro.models import transformer as T
+from repro.models.steps import init_train_state, make_train_step
+from repro.optim import AdamWConfig
+from repro.runtime import LoopConfig, TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/reliable_lm_ckpt")
+    args = ap.parse_args()
+
+    if args.full_100m:
+        # ~100M params: 12L x 768 with a 32k vocab (GPT-2-small-ish)
+        cfg = get_config("qwen2.5-14b").replace(
+            n_layers=12, d_model=768, n_heads=12, n_kv=12, d_ff=3072,
+            vocab=32000, q_block=128, kv_block=128, compute_dtype="float32")
+    else:
+        cfg = get_config("qwen2.5-14b").smoke().replace(compute_dtype="float32")
+
+    key = jax.random.PRNGKey(0)
+    params = P.materialize(key, T.model_specs(cfg))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"training {cfg.name}-derived LM: {n/1e6:.1f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq} tokens")
+
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
+                       batch_per_rank=args.batch, seed=0)
+    step_fn = jax.jit(make_train_step(cfg, AdamWConfig(
+        lr=1e-3, warmup_steps=20, total_steps=args.steps)))
+    ck = Checkpointer(args.ckpt_dir, keep=2)
+    loop = TrainLoop(step_fn, init_train_state(params),
+                     lambda s: {"tokens": jnp.asarray(data.batch_at(s))},
+                     LoopConfig(total_steps=args.steps, checkpoint_every=50,
+                                scrub_every=25, log_every=25,
+                                inject_p_bit=1e-8),
+                     ckpt=ck)
+    loop.attach_ecc()
+
+    # simulated preemption mid-run; the loop restores and replays
+    fail_at = args.steps // 2
+    t0 = time.time()
+    try:
+        loop.run(fail_at=fail_at)
+    except RuntimeError as e:
+        print(f"!! {e} — restoring from checkpoint and continuing")
+        loop.restore()
+        loop.run()
+    dt = time.time() - t0
+
+    first = loop.metrics_history[0][1] if loop.metrics_history else float("nan")
+    last = loop.metrics_history[-1][1] if loop.metrics_history else float("nan")
+    print(f"done in {dt:.1f}s: loss {first:.3f} -> {last:.3f}")
+    scrubbed = sum(int(r.corrected) for _, r in loop.scrub_reports)
+    print(f"reliability: {len(loop.scrub_reports)} scrubs, "
+          f"{scrubbed} bit flips corrected, "
+          f"{sum(int(r.uncorrectable) for _, r in loop.scrub_reports)} uncorrectable")
+
+
+if __name__ == "__main__":
+    main()

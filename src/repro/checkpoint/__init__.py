@@ -1,0 +1,3 @@
+from .checkpointer import Checkpointer, restore_resharded
+
+__all__ = ["Checkpointer", "restore_resharded"]

@@ -1,0 +1,73 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each module defines CONFIG (exact published shape) and optionally
+RULES_OVERRIDES (per-arch sharding-rule tweaks) and SHAPES (supported
+dry-run shapes).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Optional
+
+from ..models.config import ModelConfig
+
+ARCHS: List[str] = [
+    "deepseek_67b",
+    "phi3_mini_3p8b",
+    "nemotron_4_15b",
+    "qwen2_5_14b",
+    "llama4_maverick_400b_a17b",
+    "phi3_5_moe_42b_a6p6b",
+    "mamba2_130m",
+    "llama_3_2_vision_11b",
+    "recurrentgemma_2b",
+    "seamless_m4t_medium",
+]
+
+#: canonical external ids (``--arch <id>``)
+ALIASES: Dict[str, str] = {
+    "deepseek-67b": "deepseek_67b",
+    "phi3-mini-3.8b": "phi3_mini_3p8b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b_a6p6b",
+    "mamba2-130m": "mamba2_130m",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    m = importlib.import_module(f".{mod}", __package__)
+    return m.CONFIG
+
+
+def get_rules_overrides(name: str, serve: bool = False) -> dict:
+    mod = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    m = importlib.import_module(f".{mod}", __package__)
+    out = dict(getattr(m, "RULES_OVERRIDES", {}))
+    if serve:
+        out.update(getattr(m, "SERVE_RULES_OVERRIDES", {}))
+    return out
+
+
+#: defaults for training cells; config modules override via TRAIN_POLICY
+DEFAULT_TRAIN_POLICY = {
+    "microbatches": 16,        # gradient accumulation slices of the global batch
+    "param_dtype": "float32",
+    "opt_dtype": "float32",
+    "grad_dtype": "float32",   # gradient-accumulator dtype
+}
+
+
+def get_train_policy(name: str) -> dict:
+    mod = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    m = importlib.import_module(f".{mod}", __package__)
+    return {**DEFAULT_TRAIN_POLICY, **getattr(m, "TRAIN_POLICY", {})}
+
+
+def list_archs() -> List[str]:
+    return list(ALIASES.keys())

@@ -1,0 +1,31 @@
+"""mamba2-130m [ssm] — SSD state-space duality [arXiv:2405.21060].
+
+24L d_model=768 (attention-free) vocab=50280, ssm_state=128,
+headdim 64, expand 2 (d_inner 1536, 24 SSD heads).
+Sub-quadratic: runs the long_500k shape.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=1,      # attention-free; SSD heads derived from d_inner/headdim
+    n_kv=1,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    conv_width=4,
+    tie_embeddings=True,
+)
+
+# 130M params: every weight fits replicated (0.26 GB bf16).  The default
+# TP/FSDP rules only generate resharding traffic here because the fused
+# in_proj width (3352) does not divide the model axis while the conv dim
+# does — mixed sharded/replicated layouts cost all-gathers with zero
+# compute win.  Pure data parallelism: zero forward collectives.
+RULES_OVERRIDES = {"ff": (), "model_dim": ()}

@@ -1,0 +1,102 @@
+"""Bit-plane <-> word packing utilities.
+
+The mMPU stores one bit per memristor; a logical W-bit word occupies W
+memristors along a row (column).  On TPU we simulate bit-planes either as
+bool arrays with a trailing bit axis (LSB first) or packed into uint32 words
+(32 logical crossbar "rows" per lane word).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "to_bits",
+    "from_bits",
+    "rotl32",
+    "rotr32",
+    "popcount32",
+    "bit_position",
+    "float_view_u32",
+    "u32_view_float",
+]
+
+
+def to_bits(x: jax.Array, width: int) -> jax.Array:
+    """Unpack integers into a bit-plane array, LSB first.
+
+    x: integer array (...,)  ->  bool array (..., width)
+    """
+    x = x.astype(jnp.uint32) if width <= 32 else x.astype(jnp.uint64)
+    shifts = jnp.arange(width, dtype=x.dtype)
+    return ((x[..., None] >> shifts) & 1).astype(jnp.bool_)
+
+
+def from_bits(bits: jax.Array, dtype=jnp.uint32) -> jax.Array:
+    """Pack a bit-plane array (..., width) LSB-first into integers (...,)."""
+    width = bits.shape[-1]
+    acc_dtype = jnp.uint64 if width > 32 else jnp.uint32
+    shifts = jnp.arange(width, dtype=acc_dtype)
+    vals = (bits.astype(acc_dtype) << shifts).sum(axis=-1, dtype=acc_dtype)
+    return vals.astype(dtype)
+
+
+def rotl32(x: jax.Array, r) -> jax.Array:
+    """Rotate-left each uint32 by r (scalar or broadcastable array).
+
+    This is the JAX analogue of the paper's barrel shifter: a diagonal of the
+    bit matrix maps to a rotation of the packed word.
+    """
+    x = x.astype(jnp.uint32)
+    r = jnp.asarray(r, dtype=jnp.uint32) % jnp.uint32(32)
+    # jnp handles shift-by-zero fine; (x << 0) | (x >> 32) would be UB in C but
+    # we mask the complementary shift through a where.
+    left = x << r
+    right = jnp.where(r == 0, jnp.uint32(0), x >> (jnp.uint32(32) - r))
+    return left | right
+
+
+def rotr32(x: jax.Array, r) -> jax.Array:
+    r = jnp.asarray(r, dtype=jnp.uint32) % jnp.uint32(32)
+    return rotl32(x, (jnp.uint32(32) - r) % jnp.uint32(32))
+
+
+def popcount32(x: jax.Array) -> jax.Array:
+    """Population count of each uint32."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def bit_position(x: jax.Array) -> jax.Array:
+    """Index of the single set bit of each uint32 (undefined if popcount != 1).
+
+    Returns int32 in [0, 32); 0 for x == 0.
+    """
+    x = x.astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    isset = ((x[..., None] >> shifts) & 1).astype(jnp.int32)
+    return (isset * jnp.arange(32, dtype=jnp.int32)).sum(axis=-1)
+
+
+def float_view_u32(x: jax.Array) -> jax.Array:
+    """Bit-cast a float32/bfloat16/int array to its raw uint bits (u32/u16)."""
+    if x.dtype == jnp.float32:
+        return jax.lax.bitcast_convert_type(x, jnp.uint32)
+    if x.dtype == jnp.bfloat16:
+        return jax.lax.bitcast_convert_type(x, jnp.uint16)
+    if x.dtype in (jnp.int32, jnp.uint32):
+        return x.astype(jnp.uint32)
+    raise TypeError(f"unsupported dtype {x.dtype}")
+
+
+def u32_view_float(bits: jax.Array, dtype) -> jax.Array:
+    if dtype == jnp.float32:
+        return jax.lax.bitcast_convert_type(bits.astype(jnp.uint32), jnp.float32)
+    if dtype == jnp.bfloat16:
+        return jax.lax.bitcast_convert_type(bits.astype(jnp.uint16), jnp.bfloat16)
+    if dtype in (jnp.int32, jnp.uint32):
+        return bits.astype(dtype)
+    raise TypeError(f"unsupported dtype {dtype}")

@@ -1,0 +1,192 @@
+"""Crossbar array simulation: in-row / in-column vectored stateful logic.
+
+A crossbar is an (n x n) boolean resistance matrix.  Stateful logic applies
+the same gate across *all rows* (columns) in one cycle by driving bitlines
+(wordlines).  Partitions split a row (column) into independent segments so
+multiple in-row gates execute concurrently (FELIX partitions).
+
+Two error processes (paper §II-B):
+
+* direct   — a gate writes the wrong value (p_gate), injected inside the gate
+             primitives (stateful_logic.maybe_flip);
+* indirect — accessing (reading or using as gate input) a memristor corrupts
+             it with probability p_input (state drift / read disturb);
+             time-based retention drift is modeled by `drift(key, p, dt)`.
+
+The simulator is functional: every op returns a new state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import stateful_logic as sl
+
+__all__ = ["Crossbar", "ErrorModel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorModel:
+    """Soft-error rates for the crossbar simulation."""
+
+    p_gate: float = 0.0     # direct: incorrect stateful gate output
+    p_input: float = 0.0    # indirect: corruption of accessed (input) bits
+    p_retention: float = 0.0  # indirect: per-bit drift per time unit
+
+
+@dataclasses.dataclass
+class Crossbar:
+    """An n_rows x n_cols crossbar of boolean resistive states."""
+
+    state: jax.Array                      # bool (n_rows, n_cols)
+    errors: ErrorModel = dataclasses.field(default_factory=ErrorModel)
+    counter: sl.CycleCounter = dataclasses.field(default_factory=sl.CycleCounter)
+
+    # -- construction --------------------------------------------------------
+    @staticmethod
+    def zeros(n_rows: int, n_cols: int, errors: ErrorModel = ErrorModel()) -> "Crossbar":
+        return Crossbar(jnp.zeros((n_rows, n_cols), jnp.bool_), errors)
+
+    @staticmethod
+    def from_array(a, errors: ErrorModel = ErrorModel()) -> "Crossbar":
+        return Crossbar(jnp.asarray(a, jnp.bool_), errors)
+
+    @property
+    def shape(self):
+        return self.state.shape
+
+    def _with(self, state) -> "Crossbar":
+        return Crossbar(state, self.errors, self.counter)
+
+    # -- input access corruption (indirect) ----------------------------------
+    def _read_cols(self, cols: Sequence[int], key: Optional[jax.Array]):
+        """Read input columns; optionally corrupt the *stored* inputs."""
+        vals = [self.state[:, c] for c in cols]
+        if key is None or self.errors.p_input == 0.0:
+            return vals, self.state
+        new_state = self.state
+        keys = jax.random.split(key, len(cols))
+        out_vals = []
+        for c, k, v in zip(cols, keys, vals):
+            flips = jax.random.bernoulli(k, self.errors.p_input, shape=v.shape)
+            corrupted = jnp.logical_xor(v, flips)
+            new_state = new_state.at[:, c].set(corrupted)
+            out_vals.append(corrupted)
+        return out_vals, new_state
+
+    def _read_rows(self, rows: Sequence[int], key: Optional[jax.Array]):
+        vals = [self.state[r, :] for r in rows]
+        if key is None or self.errors.p_input == 0.0:
+            return vals, self.state
+        new_state = self.state
+        keys = jax.random.split(key, len(rows))
+        out_vals = []
+        for r, k, v in zip(rows, keys, vals):
+            flips = jax.random.bernoulli(k, self.errors.p_input, shape=v.shape)
+            corrupted = jnp.logical_xor(v, flips)
+            new_state = new_state.at[r, :].set(corrupted)
+            out_vals.append(corrupted)
+        return out_vals, new_state
+
+    # -- vectored in-row gate: all rows in one cycle --------------------------
+    def row_gate(self, gate: str, in_cols: Sequence[int], out_col: int,
+                 key: Optional[jax.Array] = None) -> "Crossbar":
+        """Apply `gate` with inputs at `in_cols`, output at `out_col`,
+        simultaneously in every row (paper Fig. 1(a))."""
+        k_in = k_g = None
+        if key is not None:
+            k_in, k_g = jax.random.split(key)
+        ins, state = self._read_cols(in_cols, k_in)
+        out = _apply(gate, ins, k_g, self.errors.p_gate)
+        new = state.at[:, out_col].set(out)
+        self.counter.tick(n_parallel=self.shape[0], cycles=sl.GATE_COSTS[gate])
+        return self._with(new)
+
+    # -- vectored in-column gate: all columns in one cycle ---------------------
+    def col_gate(self, gate: str, in_rows: Sequence[int], out_row: int,
+                 key: Optional[jax.Array] = None) -> "Crossbar":
+        """Apply `gate` with inputs at `in_rows`, output at `out_row`,
+        simultaneously in every column (paper Fig. 1(b))."""
+        k_in = k_g = None
+        if key is not None:
+            k_in, k_g = jax.random.split(key)
+        ins, state = self._read_rows(in_rows, k_in)
+        out = _apply(gate, ins, k_g, self.errors.p_gate)
+        new = state.at[out_row, :].set(out)
+        self.counter.tick(n_parallel=self.shape[1], cycles=sl.GATE_COSTS[gate])
+        return self._with(new)
+
+    # -- partitioned in-row gates (FELIX partitions, paper Fig. 1(c)) ---------
+    def partitioned_row_gate(self, gate: str, part_width: int,
+                             in_offsets: Sequence[int], out_offset: int,
+                             key: Optional[jax.Array] = None) -> "Crossbar":
+        """Divide every row into partitions of `part_width` columns and apply
+        the gate within each partition concurrently: inputs/outputs are given
+        as offsets *within* the partition.  One cycle for all rows x all
+        partitions."""
+        n_rows, n_cols = self.shape
+        assert n_cols % part_width == 0
+        n_parts = n_cols // part_width
+        view = self.state.reshape(n_rows, n_parts, part_width)
+        k_in = k_g = None
+        if key is not None:
+            k_in, k_g = jax.random.split(key)
+        ins = [view[:, :, o] for o in in_offsets]
+        if k_in is not None and self.errors.p_input > 0.0:
+            keys = jax.random.split(k_in, len(ins))
+            new_view = view
+            tmp = []
+            for o, k, v in zip(in_offsets, keys, ins):
+                flips = jax.random.bernoulli(k, self.errors.p_input, shape=v.shape)
+                cv = jnp.logical_xor(v, flips)
+                new_view = new_view.at[:, :, o].set(cv)
+                tmp.append(cv)
+            ins, view = tmp, new_view
+        out = _apply(gate, ins, k_g, self.errors.p_gate)
+        new = view.at[:, :, out_offset].set(out).reshape(n_rows, n_cols)
+        self.counter.tick(n_parallel=n_rows * n_parts, cycles=sl.GATE_COSTS[gate])
+        return self._with(new)
+
+    # -- write / drift ---------------------------------------------------------
+    def write_col(self, col: int, values, key: Optional[jax.Array] = None,
+                  p_write: float = 0.0) -> "Crossbar":
+        vals = jnp.asarray(values, jnp.bool_)
+        if key is not None and p_write > 0.0:
+            vals = jnp.logical_xor(vals, jax.random.bernoulli(key, p_write, vals.shape))
+        self.counter.tick(n_parallel=self.shape[0])
+        return self._with(self.state.at[:, col].set(vals))
+
+    def write_row(self, row: int, values, key: Optional[jax.Array] = None,
+                  p_write: float = 0.0) -> "Crossbar":
+        vals = jnp.asarray(values, jnp.bool_)
+        if key is not None and p_write > 0.0:
+            vals = jnp.logical_xor(vals, jax.random.bernoulli(key, p_write, vals.shape))
+        self.counter.tick(n_parallel=self.shape[1])
+        return self._with(self.state.at[row, :].set(vals))
+
+    def drift(self, key: jax.Array, dt: float = 1.0) -> "Crossbar":
+        """Retention/state-drift + abrupt events over a time interval dt."""
+        p = 1.0 - (1.0 - self.errors.p_retention) ** dt
+        flips = jax.random.bernoulli(key, p, self.state.shape)
+        return self._with(jnp.logical_xor(self.state, flips))
+
+
+def _apply(gate: str, ins, key, p_gate):
+    fns: dict = {
+        "not": lambda i, k: sl.g_not(i[0], k, p_gate),
+        "nor": lambda i, k: sl.g_nor(i[0], i[1], k, p_gate),
+        "or": lambda i, k: sl.g_or(i[0], i[1], k, p_gate),
+        "nand": lambda i, k: sl.g_nand(i[0], i[1], k, p_gate),
+        "and": lambda i, k: sl.g_and(i[0], i[1], k, p_gate),
+        "min3": lambda i, k: sl.g_min3(i[0], i[1], i[2], k, p_gate),
+        "maj3": lambda i, k: sl.g_maj3(i[0], i[1], i[2], k, p_gate),
+        "xor": lambda i, k: sl.g_xor(i[0], i[1], k, p_gate),
+    }
+    if gate not in fns:
+        raise ValueError(f"unknown gate {gate!r}")
+    if key is None or p_gate == 0.0:
+        key = None
+    return fns[gate](ins, key)

@@ -1,0 +1,230 @@
+"""Diagonal-parity ECC for high-throughput memristive PIM (paper §IV).
+
+Check bits are stored along *wrap-around diagonals* of each m x m block of
+the crossbar.  Because every diagonal intersects each row exactly once and
+each column exactly once, the parity update after an in-row OR in-column
+vectored operation is O(1) cycles — the property horizontal parity lacks
+(Fig. 2(a) vs 2(b)).  Communication along diagonals is realized by a barrel
+shifter (Fig. 2(c)); in JAX the barrel shifter is an index permutation
+(`roll`), and on the TPU-word variant (reliability.py) it is a 32-bit rotate.
+
+Parity group definition for slope s:  cell (i, j) of a block belongs to group
+k = (j - s*i) mod m, i.e. P_s[k] = XOR_i B[i, (k + s*i) mod m].
+
+Error location (multidimensional parity, [42]): a single flipped bit at
+(i0, j0) produces a one-hot syndrome in every family with hot index
+k_s = (j0 - s*i0) mod m.  Two families with slopes s_a, s_b locate the error
+uniquely iff gcd(s_b - s_a, m) = 1:
+
+    i0 = (k_a - k_b) * inv(s_b - s_a)  (mod m),      j0 = k_a + s_a*i0 (mod m)
+
+The paper's families are (leading, counter) = (+1, -1): invertible iff m is
+odd.  For even m (the paper's m ~ 16) we add a slope-2 family — (1, 2) always
+locates, (-1) is kept as an integrity check (strictly stronger code, same
+O(1) update property; see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["EccConfig", "encode", "syndrome", "correct", "verify",
+           "update_parity_col", "update_parity_row", "parity_overhead"]
+
+Parity = Dict[int, jax.Array]  # slope -> bool (nbi, nbj, m)
+
+
+@dataclasses.dataclass(frozen=True)
+class EccConfig:
+    m: int = 16                       # block size (paper: m ~ 16, n ~ 1024)
+    slopes: Tuple[int, ...] = (1, -1, 2)
+
+    def __post_init__(self):
+        if self.locating_pair() is None:
+            raise ValueError(
+                f"no slope pair with gcd(s_b - s_a, m) == 1 for m={self.m}, "
+                f"slopes={self.slopes}; cannot locate errors")
+
+    def locating_pair(self) -> Optional[Tuple[int, int]]:
+        s = self.slopes
+        for a in range(len(s)):
+            for b in range(a + 1, len(s)):
+                if math.gcd(s[b] - s[a], self.m) == 1:
+                    return s[a], s[b]
+        return None
+
+
+def _gather_idx(m: int, s: int) -> jax.Array:
+    """cols[i, k] = (k + s*i) mod m  — which column of row i is in group k."""
+    i = jnp.arange(m)[:, None]
+    k = jnp.arange(m)[None, :]
+    return (k + s * i) % m
+
+
+def _blocks(data: jax.Array, m: int) -> jax.Array:
+    r, c = data.shape
+    assert r % m == 0 and c % m == 0, f"data {data.shape} not divisible by m={m}"
+    return data.reshape(r // m, m, c // m, m).transpose(0, 2, 1, 3)  # (nbi,nbj,m,m)
+
+
+def _xor_reduce(x: jax.Array, axis: int) -> jax.Array:
+    return (x.astype(jnp.uint8).sum(axis=axis) & 1).astype(jnp.bool_)
+
+
+def encode(data: jax.Array, cfg: EccConfig = EccConfig()) -> Parity:
+    """Compute all parity families of a bool matrix (R, C)."""
+    m = cfg.m
+    b = _blocks(data, m)                      # (nbi, nbj, m, m)
+    rows = jnp.arange(m)[:, None]
+    parity: Parity = {}
+    for s in cfg.slopes:
+        gathered = b[..., rows, _gather_idx(m, s)]   # (nbi,nbj,m,m): [.., i, k]
+        parity[s] = _xor_reduce(gathered, axis=-2)   # (nbi,nbj,m)
+    return parity
+
+
+def syndrome(data: jax.Array, parity: Parity, cfg: EccConfig = EccConfig()) -> Parity:
+    fresh = encode(data, cfg)
+    return {s: jnp.logical_xor(fresh[s], parity[s]) for s in cfg.slopes}
+
+
+def verify(data: jax.Array, parity: Parity, cfg: EccConfig = EccConfig()) -> jax.Array:
+    """True iff every block of every family has a clean (zero) syndrome."""
+    syn = syndrome(data, parity, cfg)
+    return jnp.logical_not(
+        jnp.any(jnp.stack([jnp.any(v, axis=-1) for v in syn.values()])))
+
+
+def _modinv(a: int, m: int) -> int:
+    a %= m
+    for x in range(1, m):
+        if (a * x) % m == 1:
+            return x
+    raise ValueError(f"{a} not invertible mod {m}")
+
+
+def correct(data: jax.Array, parity: Parity, cfg: EccConfig = EccConfig()):
+    """Detect and correct up to one flipped bit per block per family geometry.
+
+    Returns (data', parity', stats) where stats has int32 counters:
+      corrected_data, corrected_parity, uncorrectable.
+
+    Cases per block (vectorized over all blocks):
+      * all syndromes zero                         -> clean
+      * exactly one family non-zero, one-hot       -> the check bit itself
+                                                      flipped: fix parity
+      * all families one-hot and mutually          -> data bit flipped: locate
+        consistent                                    via the locating pair,
+                                                      verify with the rest, flip
+      * anything else                              -> uncorrectable (>= 2 errors)
+    """
+    m = cfg.m
+    syn = syndrome(data, parity, cfg)
+    slopes = list(cfg.slopes)
+    syn_stack = jnp.stack([syn[s] for s in slopes])            # (F, nbi, nbj, m)
+    pop = syn_stack.astype(jnp.int32).sum(axis=-1)             # (F, nbi, nbj)
+    hot = jnp.argmax(syn_stack, axis=-1)                       # (F, nbi, nbj)
+    nonzero = pop > 0
+    onehot = pop == 1
+    n_nonzero = nonzero.astype(jnp.int32).sum(axis=0)          # (nbi, nbj)
+
+    sa, sb = cfg.locating_pair()
+    ia, ib = slopes.index(sa), slopes.index(sb)
+    inv = _modinv(sb - sa, m)
+    i0 = ((hot[ia] - hot[ib]) * inv) % m                       # (nbi, nbj)
+    j0 = (hot[ia] + sa * i0) % m
+    # consistency: every family's hot index must match (j0 - s*i0) mod m
+    consistent = jnp.ones_like(i0, dtype=bool)
+    for f, s in enumerate(slopes):
+        consistent &= hot[f] == (j0 - s * i0) % m
+    all_onehot = jnp.all(onehot, axis=0)
+
+    data_err = (n_nonzero == len(slopes)) & all_onehot & consistent
+    parity_err = (n_nonzero == 1) & (onehot | ~nonzero).all(axis=0)
+    uncorrectable = (n_nonzero > 0) & ~data_err & ~parity_err
+
+    # --- fix data errors: flip bit (i0, j0) of flagged blocks ----------------
+    nbi, nbj = i0.shape
+    b = _blocks(data, m)
+    flip = (jnp.arange(m)[None, None, :, None] == i0[..., None, None]) & \
+           (jnp.arange(m)[None, None, None, :] == j0[..., None, None])
+    flip &= data_err[..., None, None]
+    b = jnp.logical_xor(b, flip)
+    data_fixed = b.transpose(0, 2, 1, 3).reshape(data.shape)
+
+    # --- fix parity errors: the flipped check bit equals the syndrome --------
+    parity_fixed: Parity = {}
+    for f, s in enumerate(slopes):
+        fix_mask = (parity_err & nonzero[f])[..., None] & syn_stack[f]
+        parity_fixed[s] = jnp.logical_xor(parity[s], fix_mask)
+
+    stats = {
+        "corrected_data": data_err.astype(jnp.int32).sum(),
+        "corrected_parity": parity_err.astype(jnp.int32).sum(),
+        "uncorrectable": uncorrectable.astype(jnp.int32).sum(),
+    }
+    return data_fixed, parity_fixed, stats
+
+
+# --------------------------------------------------------------------------
+# O(1) incremental updates — the paper's core claim (§IV, Fig. 2(b,c)).
+# A vectored in-row op rewrites one *column* of the crossbar; a vectored
+# in-column op rewrites one *row*.  Both update every parity family with a
+# constant number of vector ops (a permutation = the barrel shifter + XOR),
+# using "new parity = old parity XOR old bit XOR new bit" linearity.
+# --------------------------------------------------------------------------
+
+def update_parity_col(parity: Parity, old_col: jax.Array, new_col: jax.Array,
+                      col: int, cfg: EccConfig = EccConfig()) -> Parity:
+    """After writing column `col` (all rows at once), update all families.
+
+    O(1) vector ops per family, independent of the number of rows.
+    """
+    m = cfg.m
+    delta = jnp.logical_xor(old_col, new_col)          # (R,)
+    nbi = delta.shape[0] // m
+    dblk = delta.reshape(nbi, m)                       # (nbi, m): local row i
+    bj, j_loc = col // m, col % m
+    out: Parity = {}
+    for s in cfg.slopes:
+        k_of_i = (j_loc - s * jnp.arange(m)) % m       # group of local row i
+        # barrel shift; scatter-add mod 2 (for |s| > 1 several rows may share
+        # a group when gcd(s, m) != 1)
+        scattered = (jnp.zeros(dblk.shape, jnp.uint8)
+                     .at[:, k_of_i].add(dblk.astype(jnp.uint8)) & 1).astype(bool)
+        out[s] = parity[s].at[:, bj, :].set(
+            jnp.logical_xor(parity[s][:, bj, :], scattered))
+    return out
+
+
+def update_parity_row(parity: Parity, old_row: jax.Array, new_row: jax.Array,
+                      row: int, cfg: EccConfig = EccConfig()) -> Parity:
+    """After writing row `row` (all columns at once), update all families.
+
+    Same O(1) property — this is the case where horizontal parity degrades to
+    O(n) (Fig. 2(a)) and diagonal parity does not.
+    """
+    m = cfg.m
+    delta = jnp.logical_xor(old_row, new_row)          # (C,)
+    nbj = delta.shape[0] // m
+    dblk = delta.reshape(nbj, m)                       # (nbj, m): local col j
+    bi, i_loc = row // m, row % m
+    out: Parity = {}
+    for s in cfg.slopes:
+        k_of_j = (jnp.arange(m) - s * i_loc) % m       # group of local col j
+        # k_of_j is always a permutation (shift by s*i_loc), but use the same
+        # scatter-add form for symmetry/safety
+        scattered = (jnp.zeros(dblk.shape, jnp.uint8)
+                     .at[:, k_of_j].add(dblk.astype(jnp.uint8)) & 1).astype(bool)
+        out[s] = parity[s].at[bi, :, :].set(
+            jnp.logical_xor(parity[s][bi, :, :], scattered))
+    return out
+
+
+def parity_overhead(cfg: EccConfig = EccConfig()) -> float:
+    """Storage overhead: |families| * m check bits per m*m data bits."""
+    return len(cfg.slopes) / cfg.m

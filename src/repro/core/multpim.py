@@ -1,0 +1,126 @@
+"""MultPIM-style in-memory fixed-point multiplication (paper §VI-A).
+
+An N x N-bit unsigned array multiplier built from the FELIX gate set
+(Min3/NOR + derived), expressed as a Min3 netlist: partial products via
+NAND+NOT, carry-save accumulation rows of full adders, final ripple
+carry-propagate adder.  For N = 32 this is ~14k stateful gates — the same
+order as MultPIM's micro-code — and the error-injection experiments inject
+faults into exactly these gate requests, accounting for logical masking, as
+the paper's modified simulator does.
+
+The TMR experiment wraps this netlist per §V: three executions + per-bit
+Minority3 voting (the voting gates are fault-injected too — "non-ideal
+voting").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .bitops import from_bits, to_bits
+from .netlist import Netlist, NetlistBuilder, execute, full_adder
+from .stateful_logic import g_maj3
+
+__all__ = ["multiplier_netlist", "multiply_bits", "multiply_words",
+           "multiply_tmr_bits", "true_product_bits"]
+
+
+@functools.lru_cache(maxsize=None)
+def multiplier_netlist(n_bits: int) -> Netlist:
+    """Build the N-bit unsigned multiplier netlist (cached per width).
+
+    Inputs: a[0..N-1] LSB-first, then b[0..N-1].  Outputs: product, 2N bits
+    LSB-first.
+    """
+    bld = NetlistBuilder()
+    a = bld.input_bits(n_bits)
+    b = bld.input_bits(n_bits)
+
+    # partial products pp[i][j] = a[j] & b[i]
+    pp = [[bld.and_(a[j], b[i]) for j in range(n_bits)] for i in range(n_bits)]
+
+    prod = [bld.ZERO] * (2 * n_bits)
+    # carry-save accumulation: S/C words aligned at the current row weight
+    S = list(pp[0])            # S[j] has weight 2^(i+j) after row i
+    C = [bld.ZERO] * n_bits
+    prod[0] = S[0]
+    for i in range(1, n_bits):
+        newS, newC = [], []
+        for j in range(n_bits):
+            s_above = S[j + 1] if j + 1 < n_bits else bld.ZERO
+            s, c = full_adder(bld, pp[i][j], s_above, C[j])
+            newS.append(s)
+            newC.append(c)
+        S, C = newS, newC
+        prod[i] = S[0]
+    # final carry-propagate add of the leftover S (shifted) and C words
+    carry = bld.ZERO
+    for j in range(n_bits):
+        u = S[j + 1] if j + 1 < n_bits else bld.ZERO
+        s, carry = full_adder(bld, u, C[j], carry)
+        prod[n_bits + j] = s
+    bld.mark_outputs(prod)
+    return bld.build()
+
+
+def _pack_inputs(a_words: jax.Array, b_words: jax.Array, n_bits: int) -> jax.Array:
+    a_bits = to_bits(a_words, n_bits)
+    b_bits = to_bits(b_words, n_bits)
+    return jnp.concatenate([a_bits, b_bits], axis=-1)
+
+
+def multiply_bits(a_words: jax.Array, b_words: jax.Array, n_bits: int,
+                  key: Optional[jax.Array] = None, p_gate: float = 0.0,
+                  fault_gate: Optional[jax.Array] = None) -> jax.Array:
+    """Multiply batches of N-bit words through the in-memory netlist.
+
+    Returns the 2N-bit product as a bool bit-plane (trials, 2N), LSB first —
+    bit-exact regardless of x64 mode.
+    """
+    nl = multiplier_netlist(n_bits)
+    return execute(nl, _pack_inputs(a_words, b_words, n_bits),
+                   key=key, p_gate=p_gate, fault_gate=fault_gate)
+
+
+def multiply_words(a_words: jax.Array, b_words: jax.Array, n_bits: int,
+                   key: Optional[jax.Array] = None, p_gate: float = 0.0,
+                   fault_gate: Optional[jax.Array] = None) -> jax.Array:
+    """As multiply_bits but packed to (trials, 2) uint32 words (lo, hi)."""
+    bits = multiply_bits(a_words, b_words, n_bits, key, p_gate, fault_gate)
+    lo = from_bits(bits[..., :n_bits], jnp.uint32)
+    hi = from_bits(bits[..., n_bits:], jnp.uint32)
+    return jnp.stack([lo, hi], axis=-1)
+
+
+def multiply_tmr_bits(a_words: jax.Array, b_words: jax.Array, n_bits: int,
+                      key: jax.Array, p_gate: float,
+                      ideal_voting: bool = False) -> jax.Array:
+    """TMR multiplication (serial discipline): three netlist executions with
+    independent fault streams, then per-bit Minority3+NOT voting.
+
+    With ideal_voting=False the two voting gates per output bit are
+    fault-injected as well (paper Fig. 4: non-ideal voting becomes the
+    bottleneck near p_gate = 1e-9).  Returns bool bits (trials, 2N).
+    """
+    nl = multiplier_netlist(n_bits)
+    inputs = _pack_inputs(a_words, b_words, n_bits)
+    k1, k2, k3, kv = jax.random.split(key, 4)
+    o1 = execute(nl, inputs, key=k1, p_gate=p_gate)
+    o2 = execute(nl, inputs, key=k2, p_gate=p_gate)
+    o3 = execute(nl, inputs, key=k3, p_gate=p_gate)
+    if ideal_voting:
+        return g_maj3(o1, o2, o3)
+    return g_maj3(o1, o2, o3, kv, p_gate)
+
+
+def true_product_bits(a_words, b_words, n_bits: int):
+    """Oracle product bits via numpy uint64 (no x64 dependency in JAX)."""
+    import numpy as np
+    a = np.asarray(a_words).astype(np.uint64)
+    b = np.asarray(b_words).astype(np.uint64)
+    prod = a * b
+    shifts = np.arange(2 * n_bits, dtype=np.uint64)
+    return ((prod[..., None] >> shifts) & 1).astype(bool)

@@ -1,0 +1,216 @@
+"""Minority3-normalized gate netlists with fault injection.
+
+The mMPU maps arithmetic functions to sequences of stateful gates (§III-B).
+We model a function as a *netlist* of Minority3 gates (every FELIX/MAGIC gate
+is Min3 with constant inputs: NOR(a,b)=Min3(a,b,1), NAND(a,b)=Min3(a,b,0),
+NOT(a)=Min3(a,a,0)), executed sequentially — exactly the "micro-code gate
+requests" the paper's modified MultPIM simulator injects faults into (§VI-A).
+
+Execution is vectorized over trials (= crossbar row parallelism) with
+`lax.scan` over gates.  Fault modes:
+
+* iid          — every gate output flips w.p. p_gate (direct soft errors)
+* single-fault — trial t flips exactly gate fault_gate[t]; with
+                 fault_gate = arange(G) one pass measures logical masking of
+                 every gate position exhaustively (used to extrapolate
+                 p_mult at low p_gate, see analytics.py)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Netlist", "NetlistBuilder", "execute", "full_adder"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Netlist:
+    n_wires: int
+    inputs: np.ndarray        # (n_in,) wire ids
+    outputs: np.ndarray       # (n_out,) wire ids
+    gates: np.ndarray         # (G, 4) int32: in1, in2, in3, out (all Min3)
+
+    @property
+    def n_gates(self) -> int:
+        return int(self.gates.shape[0])
+
+
+class NetlistBuilder:
+    """Builds Min3 netlists with constant folding and duplicate-input
+    simplification (keeps the gate count honest vs. hand-mapped micro-code)."""
+
+    ZERO = 0
+    ONE = 1
+
+    def __init__(self):
+        self._n = 2                    # wires 0/1 are constants
+        self._gates: List[tuple] = []
+        self._inputs: List[int] = []
+        self._outputs: List[int] = []
+
+    # -- wires ---------------------------------------------------------------
+    def input_bits(self, n: int) -> List[int]:
+        ws = list(range(self._n, self._n + n))
+        self._n += n
+        self._inputs.extend(ws)
+        return ws
+
+    def mark_outputs(self, wires: Sequence[int]) -> None:
+        self._outputs.extend(int(w) for w in wires)
+
+    def _emit(self, a: int, b: int, c: int) -> int:
+        out = self._n
+        self._n += 1
+        self._gates.append((a, b, c, out))
+        return out
+
+    # -- primitive: Minority3 with folding -------------------------------------
+    def min3(self, a: int, b: int, c: int) -> int:
+        ins = sorted((a, b, c))
+        consts = [w for w in ins if w in (self.ZERO, self.ONE)]
+        # fully constant
+        if len(consts) == 3:
+            maj = sum(1 for w in ins if w == self.ONE) >= 2
+            return self.ZERO if maj else self.ONE
+        # two constants: result is const or NOT(x)
+        if len(consts) == 2:
+            x = next(w for w in ins if w not in (self.ZERO, self.ONE))
+            ones = consts.count(self.ONE)
+            if ones == 2:
+                return self.ZERO            # maj = 1
+            if ones == 0:
+                return self.ONE             # maj = 0
+            return self._emit(x, x, self.ZERO)  # maj = x -> NOT x
+        # duplicate non-const input: Min3(a,a,c) = NOT a
+        if a == b or a == c:
+            return self._emit(a, a, self.ZERO)
+        if b == c:
+            return self._emit(b, b, self.ZERO)
+        return self._emit(a, b, c)
+
+    # -- derived gates ---------------------------------------------------------
+    def not_(self, a: int) -> int:
+        if a == self.ZERO:
+            return self.ONE
+        if a == self.ONE:
+            return self.ZERO
+        return self.min3(a, a, self.ZERO)
+
+    def nor(self, a: int, b: int) -> int:
+        return self.min3(a, b, self.ONE)
+
+    def nand(self, a: int, b: int) -> int:
+        return self.min3(a, b, self.ZERO)
+
+    def and_(self, a: int, b: int) -> int:
+        if a == self.ZERO or b == self.ZERO:
+            return self.ZERO
+        if a == self.ONE:
+            return b
+        if b == self.ONE:
+            return a
+        return self.not_(self.nand(a, b))
+
+    def or_(self, a: int, b: int) -> int:
+        if a == self.ONE or b == self.ONE:
+            return self.ONE
+        if a == self.ZERO:
+            return b
+        if b == self.ZERO:
+            return a
+        return self.not_(self.nor(a, b))
+
+    def xor(self, a: int, b: int) -> int:
+        if a == self.ZERO:
+            return b
+        if b == self.ZERO:
+            return a
+        if a == self.ONE:
+            return self.not_(b)
+        if b == self.ONE:
+            return self.not_(a)
+        if a == b:
+            return self.ZERO
+        # 5-NOR decomposition
+        x1 = self.nor(a, b)
+        x2 = self.nor(a, x1)
+        x3 = self.nor(b, x1)
+        return self.not_(self.nor(x2, x3))
+
+    def maj3(self, a: int, b: int, c: int) -> int:
+        if a == self.ZERO:
+            return self.and_(b, c)
+        if b == self.ZERO:
+            return self.and_(a, c)
+        if c == self.ZERO:
+            return self.and_(a, b)
+        if a == self.ONE:
+            return self.or_(b, c)
+        if b == self.ONE:
+            return self.or_(a, c)
+        if c == self.ONE:
+            return self.or_(a, b)
+        return self.not_(self.min3(a, b, c))
+
+    def build(self) -> Netlist:
+        return Netlist(
+            n_wires=self._n,
+            inputs=np.asarray(self._inputs, np.int32),
+            outputs=np.asarray(self._outputs, np.int32),
+            gates=np.asarray(self._gates, np.int32).reshape(-1, 4),
+        )
+
+
+def full_adder(bld: NetlistBuilder, a: int, b: int, c: int):
+    """sum = a^b^c (10 gates), carry = Maj3 (2 gates); folds to a half adder
+    when any input is constant."""
+    s = bld.xor(bld.xor(a, b), c)
+    cout = bld.maj3(a, b, c)
+    return s, cout
+
+
+def execute(nl: Netlist, inputs: jax.Array,
+            key: Optional[jax.Array] = None, p_gate: float = 0.0,
+            fault_gate: Optional[jax.Array] = None) -> jax.Array:
+    """Run the netlist on a batch of input vectors.
+
+    inputs:     bool (trials, n_in)
+    key/p_gate: iid per-gate fault injection
+    fault_gate: int32 (trials,) — trial t flips exactly gate fault_gate[t]
+                (exhaustive single-fault analysis); -1 disables for a trial.
+
+    Returns bool (trials, n_out).
+    """
+    trials = inputs.shape[0]
+    state = jnp.zeros((trials, nl.n_wires), jnp.bool_)
+    state = state.at[:, 1].set(True)
+    state = state.at[:, jnp.asarray(nl.inputs)].set(inputs)
+
+    gates = jnp.asarray(nl.gates)                       # (G, 4)
+    gate_ids = jnp.arange(nl.n_gates, dtype=jnp.int32)
+
+    use_iid = key is not None and p_gate > 0.0
+    use_single = fault_gate is not None
+
+    def step(state, xs):
+        gid, row = xs
+        i1, i2, i3, out = row[0], row[1], row[2], row[3]
+        a = jax.lax.dynamic_index_in_dim(state, i1, axis=1, keepdims=False)
+        b = jax.lax.dynamic_index_in_dim(state, i2, axis=1, keepdims=False)
+        c = jax.lax.dynamic_index_in_dim(state, i3, axis=1, keepdims=False)
+        maj = (a & b) | (b & c) | (a & c)
+        val = jnp.logical_not(maj)
+        if use_iid:
+            flips = jax.random.bernoulli(jax.random.fold_in(key, gid), p_gate, (trials,))
+            val = jnp.logical_xor(val, flips)
+        if use_single:
+            val = jnp.logical_xor(val, fault_gate == gid)
+        state = jax.lax.dynamic_update_index_in_dim(state, val, out, axis=1)
+        return state, None
+
+    state, _ = jax.lax.scan(step, state, (gate_ids, gates))
+    return state[:, jnp.asarray(nl.outputs)]

@@ -1,0 +1,267 @@
+"""TPU adaptation of the paper's reliability mechanisms (DESIGN.md §3).
+
+The diagonal-parity code is re-tiled for the TPU memory hierarchy: instead of
+an m x m crossbar block of memristors, a block is **32 consecutive uint32
+words** of an HBM-resident parameter buffer — a 32 x 32 bit matrix whose
+rows are words and whose columns are bit lanes.  The key identity:
+
+    parity word of slope s over block W[0..31]  =  XOR_i rotl32(W[i], s*i)
+
+i.e. bit k of the parity word is XOR_i W[i][(k - s*i) mod 32] — exactly the
+paper's wrap-around diagonal, with the 32-bit *rotate playing the role of the
+barrel shifter*.  Both "row" updates (a whole word rewritten) and "column"
+updates (one bit lane across words, e.g. a sign-bit flip pattern) update the
+parity in O(1) vector ops, preserving the paper's central property.
+
+Families: slopes (1, 2, -1): (1,2) locate a single flipped bit per block
+(gcd(2-1,32)=1); (-1) is the paper's counter-diagonal, kept as an integrity
+check (see DESIGN.md §8).  Storage overhead = 3/32 ~ 9.4%.
+
+`ReliableStore` wraps a parameter pytree: encode once, `scrub()` between
+training steps verifies and corrects bit flips (SDC defense), and reports
+uncorrectable blocks so the runtime can trigger a checkpoint restore —
+connecting the paper's mechanism to large-scale fault tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .bitops import bit_position, popcount32, rotl32
+from .tmr import vote_array
+
+__all__ = ["WordEccConfig", "encode_words", "syndrome_words", "correct_words",
+           "ReliableStore", "ScrubReport", "inject_bit_flips", "tmr_serve"]
+
+BLOCK = 32  # words per block == bits per word
+
+
+@dataclasses.dataclass(frozen=True)
+class WordEccConfig:
+    slopes: Tuple[int, ...] = (1, 2, -1)
+
+    @property
+    def n_parity_words(self) -> int:
+        return len(self.slopes)
+
+
+def _as_blocks(words: jax.Array) -> jax.Array:
+    assert words.ndim == 1 and words.shape[0] % BLOCK == 0
+    return words.reshape(-1, BLOCK)
+
+
+def encode_words(words: jax.Array, cfg: WordEccConfig = WordEccConfig()) -> jax.Array:
+    """Parity words for a flat uint32 buffer: (n_blocks, n_families).
+
+    parity[b, f] = XOR_i rotl32(words[b*32 + i], slopes[f] * i)
+    """
+    blocks = _as_blocks(words)                              # (B, 32)
+    i = jnp.arange(BLOCK, dtype=jnp.int32)
+    outs = []
+    for s in cfg.slopes:
+        rot = rotl32(blocks, (s * i) % BLOCK)               # (B, 32)
+        acc = rot[:, 0]
+        for t in range(1, BLOCK):
+            acc = acc ^ rot[:, t]
+        outs.append(acc)
+    return jnp.stack(outs, axis=-1)                         # (B, F)
+
+
+def syndrome_words(words: jax.Array, parity: jax.Array,
+                   cfg: WordEccConfig = WordEccConfig()) -> jax.Array:
+    return encode_words(words, cfg) ^ parity
+
+
+class ScrubReport(NamedTuple):
+    corrected: jax.Array        # int32: blocks with a single bit corrected
+    parity_fixed: jax.Array     # int32: blocks where a check word was fixed
+    uncorrectable: jax.Array    # int32: blocks with >= 2 errors
+
+
+def correct_words(words: jax.Array, parity: jax.Array,
+                  cfg: WordEccConfig = WordEccConfig()):
+    """Locate and correct one flipped bit per 32-word block.
+
+    For an error in data word i0, bit j0: family-s syndrome is one-hot with
+    hot bit k_s = (j0 + s*i0) mod 32 (rotl by s*i moves bit j to j + s*i).
+    With slopes (1,2): i0 = k_2 - k_1, j0 = k_1 - i0 (mod 32).
+    """
+    slopes = list(cfg.slopes)
+    syn = syndrome_words(words, parity, cfg)                # (B, F)
+    pop = popcount32(syn)                                   # (B, F)
+    hot = jnp.stack([bit_position(syn[:, f]) for f in range(len(slopes))], -1)
+    nonzero = pop > 0
+    onehot = pop == 1
+    n_nonzero = nonzero.astype(jnp.int32).sum(-1)
+
+    ia, ib = slopes.index(1), slopes.index(2)
+    i0 = (hot[:, ib] - hot[:, ia]) % BLOCK
+    j0 = (hot[:, ia] - i0) % BLOCK
+    consistent = jnp.ones(syn.shape[0], dtype=bool)
+    for f, s in enumerate(slopes):
+        consistent &= hot[:, f] == (j0 + s * i0) % BLOCK
+
+    data_err = (n_nonzero == len(slopes)) & onehot.all(-1) & consistent
+    parity_err = (n_nonzero == 1) & (onehot | ~nonzero).all(-1)
+    uncorrectable = (n_nonzero > 0) & ~data_err & ~parity_err
+
+    blocks = _as_blocks(words)
+    flip_word = jnp.where(data_err,
+                          jnp.uint32(1) << j0.astype(jnp.uint32),
+                          jnp.uint32(0))
+    onehot_row = (jnp.arange(BLOCK)[None, :] == i0[:, None])
+    blocks = blocks ^ (onehot_row.astype(jnp.uint32) * flip_word[:, None])
+    parity_fix = jnp.where((parity_err[:, None] & nonzero), syn, jnp.uint32(0))
+    report = ScrubReport(
+        corrected=data_err.astype(jnp.int32).sum(),
+        parity_fixed=parity_err.astype(jnp.int32).sum(),
+        uncorrectable=uncorrectable.astype(jnp.int32).sum(),
+    )
+    return blocks.reshape(-1), parity ^ parity_fix, report
+
+
+# --------------------------------------------------------------------------
+# parameter-store integration
+# --------------------------------------------------------------------------
+
+def _leaf_to_words(x: jax.Array) -> Tuple[jax.Array, int]:
+    """View any leaf as a zero-padded flat uint32 buffer (pad length in words)."""
+    if x.dtype == jnp.bfloat16:
+        # pack pairs of u16 halves into u32 words (pad to even length)
+        u16 = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint16)
+        if u16.shape[0] % 2:
+            u16 = jnp.pad(u16, (0, 1))
+        flat = u16[0::2].astype(jnp.uint32) | (u16[1::2].astype(jnp.uint32) << 16)
+    elif x.dtype == jnp.float32:
+        flat = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint32)
+    elif x.dtype in (jnp.int32, jnp.uint32):
+        flat = x.reshape(-1).astype(jnp.uint32)
+    else:
+        raise TypeError(f"ReliableStore: unsupported dtype {x.dtype}")
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def _words_to_leaf(words: jax.Array, like: jax.Array, pad: int) -> jax.Array:
+    if pad:
+        words = words[:-pad] if like.dtype != jnp.bfloat16 else words
+    if like.dtype == jnp.bfloat16:
+        u16 = jnp.stack([(words & 0xFFFF).astype(jnp.uint16),
+                         (words >> 16).astype(jnp.uint16)], -1).reshape(-1)
+        n = int(np_prod(like.shape))
+        u16 = u16[:n]
+        return jax.lax.bitcast_convert_type(u16, jnp.bfloat16).reshape(like.shape)
+    if like.dtype == jnp.float32:
+        return jax.lax.bitcast_convert_type(words, jnp.float32).reshape(like.shape)
+    return words.astype(like.dtype).reshape(like.shape)
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+@jax.tree_util.register_pytree_node_class
+class ReliableStore:
+    """ECC-protected parameter pytree (the paper's §IV at datacenter scale).
+
+    params are stored as-is (zero-copy for the forward pass); check words are
+    held alongside.  `scrub()` re-derives syndromes and corrects single-bit
+    flips per 32-word block, returning a ScrubReport.  Call `refresh(params)`
+    after an optimizer step rewrites the weights (the "function output ECC
+    update" of §IV — here whole buffers change, so re-encode; incremental
+    column/row updates are exercised in core/ecc.py and the Pallas kernel).
+    """
+
+    def __init__(self, params: Any, parity: Any, cfg: WordEccConfig = WordEccConfig()):
+        self.params = params
+        self.parity = parity
+        self.cfg = cfg
+
+    @staticmethod
+    def protect(params: Any, cfg: WordEccConfig = WordEccConfig()) -> "ReliableStore":
+        def enc(x):
+            words, _ = _leaf_to_words(x)
+            return encode_words(words, cfg)
+        return ReliableStore(params, jax.tree.map(enc, params), cfg)
+
+    def refresh(self, new_params: Any) -> "ReliableStore":
+        return ReliableStore.protect(new_params, self.cfg)
+
+    def scrub(self) -> Tuple["ReliableStore", ScrubReport]:
+        cfg = self.cfg
+
+        def fix(x, par):
+            words, pad = _leaf_to_words(x)
+            fixed, par2, rep = correct_words(words, par, cfg)
+            return _words_to_leaf(fixed, x, pad), par2, rep
+
+        leaves, treedef = jax.tree.flatten(self.params)
+        pleaves = treedef.flatten_up_to(self.parity)
+        out_p, out_c, reps = [], [], []
+        for x, par in zip(leaves, pleaves):
+            xf, pf, rep = fix(x, par)
+            out_p.append(xf)
+            out_c.append(pf)
+            reps.append(rep)
+        total = ScrubReport(
+            corrected=sum(r.corrected for r in reps),
+            parity_fixed=sum(r.parity_fixed for r in reps),
+            uncorrectable=sum(r.uncorrectable for r in reps),
+        )
+        return ReliableStore(treedef.unflatten(out_p), treedef.unflatten(out_c),
+                             cfg), total
+
+    # pytree plumbing
+    def tree_flatten(self):
+        return (self.params, self.parity), self.cfg
+
+    @classmethod
+    def tree_unflatten(cls, cfg, children):
+        return cls(children[0], children[1], cfg)
+
+
+def inject_bit_flips(params: Any, key: jax.Array, p_bit: float) -> Any:
+    """Indirect-soft-error injector: flip each stored bit w.p. p_bit."""
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for x, k in zip(leaves, keys):
+        words, pad = _leaf_to_words(x)
+        nbits = words.shape[0] * 32
+        flips = jax.random.bernoulli(k, p_bit, (words.shape[0], 32))
+        mask = (flips.astype(jnp.uint32) << jnp.arange(32, dtype=jnp.uint32)[None, :]).sum(
+            axis=1, dtype=jnp.uint32)
+        out.append(_words_to_leaf(words ^ mask, x, pad))
+    return treedef.unflatten(out)
+
+
+def tmr_serve(serve_fn, mode: str = "serial"):
+    """TMR-voted serving (paper §V on TPU): run the model 3x, vote per-bit.
+
+    serve_fn(params, *inputs) -> pytree of arrays.  The three copies receive
+    independently *scrubbed/corrupted* params via an optional corruptor in
+    tests; in production the copies run on disjoint replica groups (parallel
+    mode shards the leading replica axis over the mesh).
+    """
+    def serial(p1, p2, p3, *inputs):
+        o1 = serve_fn(p1, *inputs)
+        o2 = serve_fn(p2, *inputs)
+        o3 = serve_fn(p3, *inputs)
+        return jax.tree.map(vote_array, o1, o2, o3)
+
+    def parallel(p1, p2, p3, *inputs):
+        stacked = jax.tree.map(lambda a, b, c: jnp.stack([a, b, c]), p1, p2, p3)
+        outs = jax.vmap(lambda p: serve_fn(p, *inputs))(stacked)
+        o1, o2, o3 = (jax.tree.map(lambda x, i=i: x[i], outs) for i in range(3))
+        return jax.tree.map(vote_array, o1, o2, o3)
+
+    return serial if mode == "serial" else parallel

@@ -1,0 +1,143 @@
+"""Stateful-logic gate primitives (MAGIC / FELIX / IMPLY families).
+
+A memristive stateful gate computes a Boolean function of the resistive
+states of its input memristors and writes it into an output memristor, in a
+single cycle, *in parallel across all rows (columns)* of a crossbar.  We
+simulate gates as vectorized boolean ops; the vectorized axis IS the
+row/column parallelism.
+
+Error model (paper §II-B, "direct" soft errors): each gate evaluation
+produces the wrong output with probability ``p_gate`` (independently per row,
+per gate).  Injection is explicit — every primitive takes an optional
+``(key, p_gate)`` pair so that reliability experiments control the fault
+stream deterministically.
+
+Cycle accounting: each stateful gate is one crossbar cycle regardless of how
+many rows it spans (that is the whole point of the paper).  ``CycleCounter``
+tracks latency (cycles) and gate-evaluations (throughput/energy proxy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "CycleCounter",
+    "maybe_flip",
+    "g_not",
+    "g_nor",
+    "g_or",
+    "g_nand",
+    "g_and",
+    "g_min3",
+    "g_maj3",
+    "g_xor",
+    "GATE_COSTS",
+]
+
+
+@dataclasses.dataclass
+class CycleCounter:
+    """Latency/energy accounting for stateful-logic sequences.
+
+    cycles:  crossbar cycles (latency) — one per gate *issue*, independent of
+             how many rows execute it in parallel.
+    gate_evals: total gate evaluations (cycles x parallel rows) — an
+             energy/throughput proxy.
+    """
+
+    cycles: int = 0
+    gate_evals: int = 0
+
+    def tick(self, n_parallel: int = 1, cycles: int = 1) -> None:
+        self.cycles += cycles
+        self.gate_evals += cycles * n_parallel
+
+    def __add__(self, other: "CycleCounter") -> "CycleCounter":
+        return CycleCounter(self.cycles + other.cycles, self.gate_evals + other.gate_evals)
+
+
+def maybe_flip(out: jax.Array, key: Optional[jax.Array], p_gate) -> jax.Array:
+    """Flip each output bit independently with probability p_gate."""
+    if key is None:
+        return out
+    flips = jax.random.bernoulli(key, p_gate, shape=out.shape)
+    return jnp.logical_xor(out, flips)
+
+
+# --- single-cycle stateful gates -------------------------------------------
+# MAGIC natively provides NOR/NOT; FELIX adds OR, NAND and Minority3 in one
+# cycle.  AND/XOR/MAJ are multi-cycle compositions; their cycle costs are in
+# GATE_COSTS and used by the crossbar-level cost accounting.
+
+def g_not(a, key=None, p_gate=0.0):
+    return maybe_flip(jnp.logical_not(a), key, p_gate)
+
+
+def g_nor(a, b, key=None, p_gate=0.0):
+    return maybe_flip(jnp.logical_not(jnp.logical_or(a, b)), key, p_gate)
+
+
+def g_or(a, b, key=None, p_gate=0.0):  # FELIX single cycle
+    return maybe_flip(jnp.logical_or(a, b), key, p_gate)
+
+
+def g_nand(a, b, key=None, p_gate=0.0):  # FELIX single cycle
+    return maybe_flip(jnp.logical_not(jnp.logical_and(a, b)), key, p_gate)
+
+
+def g_and(a, b, key=None, p_gate=0.0):
+    """AND = NOT(NAND): 2 cycles."""
+    if key is None:
+        return jnp.logical_and(a, b)
+    k1, k2 = jax.random.split(key)
+    return g_not(g_nand(a, b, k1, p_gate), k2, p_gate)
+
+
+def g_min3(a, b, c, key=None, p_gate=0.0):
+    """Minority3 (FELIX, single cycle): NOT(majority(a,b,c)).
+
+    This is the paper's voting gate.
+    """
+    maj = (a & b) | (b & c) | (a & c)
+    return maybe_flip(jnp.logical_not(maj), key, p_gate)
+
+
+def g_maj3(a, b, c, key=None, p_gate=0.0):
+    """Majority = NOT(Minority3): 2 cycles (Min3 then NOT)."""
+    if key is None:
+        return (a & b) | (b & c) | (a & c)
+    k1, k2 = jax.random.split(key)
+    return g_not(g_min3(a, b, c, k1, p_gate), k2, p_gate)
+
+
+def g_xor(a, b, key=None, p_gate=0.0):
+    """XOR via 5 NOR gates (NOR-only decomposition):
+
+      x1 = NOR(a, b); x2 = NOR(a, x1); x3 = NOR(b, x1);
+      x4 = NOR(x2, x3) = XNOR; out = NOT(x4).
+    """
+    if key is None:
+        return jnp.logical_xor(a, b)
+    ks = jax.random.split(key, 5)
+    x1 = g_nor(a, b, ks[0], p_gate)
+    x2 = g_nor(a, x1, ks[1], p_gate)
+    x3 = g_nor(b, x1, ks[2], p_gate)
+    x4 = g_nor(x2, x3, ks[3], p_gate)
+    return g_not(x4, ks[4], p_gate)
+
+
+#: crossbar cycles per logical op (FELIX gate set)
+GATE_COSTS = {
+    "not": 1,
+    "nor": 1,
+    "or": 1,
+    "nand": 1,
+    "min3": 1,
+    "and": 2,
+    "maj3": 2,
+    "xor": 5,
+}

@@ -1,0 +1,108 @@
+"""Triple modular redundancy with per-bit Minority3 voting (paper §V).
+
+Three execution disciplines, identical output semantics, different cost:
+
+* serial        — 3x latency, ~1x area (inputs/intermediates reused)
+* parallel      — 1x latency, 3x area (memristive partitions; on TPU: 3
+                  replicas across a mesh axis / vmap)
+* semi-parallel — 1x latency, 1x area, 1/3 throughput (repeat across rows)
+
+Voting is **per-bit** with the Minority3 stateful gate: majority = NOT(Min3),
+2 crossbar cycles per bit-plane, itself vulnerable to soft errors
+("non-ideal voting") — the paper shows this becomes the reliability
+bottleneck near p_gate = 1e-9 (Fig. 4, dashed line).
+
+Per-bit voting strictly dominates per-element voting: they differ only where
+per-element voting is undefined (no two copies agree on the whole word).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import stateful_logic as sl
+from .bitops import float_view_u32, u32_view_float
+
+__all__ = ["TmrCost", "vote_bits", "vote_words", "vote_array",
+           "tmr", "TMR_COSTS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TmrCost:
+    latency_x: float
+    area_x: float
+    throughput_x: float
+
+
+#: paper §V trade-off surface, relative to the unreliable baseline
+TMR_COSTS = {
+    "serial": TmrCost(latency_x=3.0, area_x=1.0, throughput_x=1.0),
+    "parallel": TmrCost(latency_x=1.0, area_x=3.0, throughput_x=1.0),
+    "semi_parallel": TmrCost(latency_x=1.0, area_x=1.0, throughput_x=1.0 / 3.0),
+}
+
+
+def vote_bits(a: jax.Array, b: jax.Array, c: jax.Array,
+              key: Optional[jax.Array] = None, p_gate: float = 0.0) -> jax.Array:
+    """Per-bit majority of three boolean bit-planes via Minority3 + NOT.
+
+    With (key, p_gate) the two voting gates are themselves fault-injected
+    (non-ideal voting, as evaluated in the paper's Fig. 4).
+    """
+    if key is None:
+        return sl.g_maj3(a, b, c)
+    return sl.g_maj3(a, b, c, key, p_gate)
+
+
+def vote_words(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """Per-bit majority on packed integer words (uint/int arrays)."""
+    return (a & b) | (b & c) | (a & c)
+
+
+def vote_array(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """Per-bit majority on arbitrary arrays (floats voted on raw IEEE bits).
+
+    This is the TPU-facing voter used by the reliable serving path: bitcast
+    to words, vote bitwise, bitcast back.  Any single corrupted copy is
+    corrected exactly, including NaN-producing bit flips.
+    """
+    if jnp.issubdtype(a.dtype, jnp.floating):
+        av, bv, cv = float_view_u32(a), float_view_u32(b), float_view_u32(c)
+        return u32_view_float(vote_words(av, bv, cv), a.dtype)
+    if a.dtype == jnp.bool_:
+        return vote_bits(a, b, c)
+    return vote_words(a, b, c)
+
+
+def tmr(fn: Callable[..., jax.Array], mode: str = "serial",
+        voter: Callable = vote_array):
+    """Wrap `fn(key, *args) -> pytree` with triple-modular redundancy.
+
+    `fn` must accept a PRNG key as its first argument (the per-copy fault
+    stream); the wrapper runs three copies with independent keys and votes
+    per-bit on every leaf.
+
+    mode='serial'   : three sequential evaluations (3x latency, reuse).
+    mode='parallel' : vmap over a stacked replica axis (1x latency, 3x area;
+                      on a real mesh the replica axis is sharded).
+    mode='semi_parallel': batched side-by-side within the same call (the
+                      crossbar-rows analogue) — implemented like 'parallel'
+                      but accounted at 1/3 throughput.
+    """
+    if mode not in TMR_COSTS:
+        raise ValueError(f"mode must be one of {sorted(TMR_COSTS)}")
+
+    def wrapped(key: jax.Array, *args):
+        keys = jax.random.split(key, 3)
+        if mode == "serial":
+            outs = [fn(k, *args) for k in keys]
+        else:
+            outs = jax.vmap(lambda k: fn(k, *args))(keys)
+            outs = [jax.tree.map(lambda x, i=i: x[i], outs) for i in range(3)]
+        return jax.tree.map(lambda a, b, c: voter(a, b, c), *outs)
+
+    wrapped.cost = TMR_COSTS[mode]
+    return wrapped

@@ -1,0 +1,4 @@
+from .synthetic import SyntheticLM, make_batch_specs
+from .loader import Prefetcher, ShardedLoader
+
+__all__ = ["SyntheticLM", "make_batch_specs", "Prefetcher", "ShardedLoader"]

@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (handles layout/padding, interpret flag)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+This container is CPU-only: kernels are validated with interpret=True
+(the kernel body executes on CPU); on a real TPU set
+REPRO_PALLAS_INTERPRET=0.
+
+Kernels:
+  diag_parity     — rotate-XOR diagonal-parity encode (ECC hot loop, §IV)
+  tmr_vote        — per-bit 2-of-3 majority voting (TMR hot loop, §V)
+  crossbar_nor    — in-VMEM Min3 netlist interpreter, trials bit-packed in
+                    uint32 lanes (the mMPU row-parallelism, §III)
+  flash_attention — online-softmax blocked attention (model hot loop)
+"""
+import os
+
+
+def use_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"

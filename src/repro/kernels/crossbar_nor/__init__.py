@@ -1,0 +1,4 @@
+from .ops import execute_netlist
+from .ref import execute_netlist_ref
+
+__all__ = ["execute_netlist", "execute_netlist_ref"]

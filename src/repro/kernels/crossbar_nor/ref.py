@@ -1,0 +1,11 @@
+"""Oracle: the lax.scan netlist executor from the core library."""
+from __future__ import annotations
+
+import jax
+
+from ...core.netlist import Netlist, execute
+
+
+def execute_netlist_ref(nl: Netlist, inputs: jax.Array) -> jax.Array:
+    """inputs: bool (trials, n_in) -> bool (trials, n_out), fault-free."""
+    return execute(nl, inputs)

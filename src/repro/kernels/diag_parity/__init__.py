@@ -1,0 +1,4 @@
+from .ops import encode_parity
+from .ref import encode_parity_ref
+
+__all__ = ["encode_parity", "encode_parity_ref"]

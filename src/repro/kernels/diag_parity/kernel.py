@@ -1,0 +1,53 @@
+"""Diagonal-parity encode kernel (paper §IV on TPU words).
+
+A block is 32 consecutive uint32 words; the slope-s parity word is
+XOR_i rotl32(w_i, s*i) — the 32-bit rotate IS the paper's barrel shifter.
+The kernel tiles (n_blocks, 32) into VMEM with `bm` blocks per grid step and
+unrolls the 32-word XOR tree; rotation amounts are compile-time constants so
+each step is two shifts and an or on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 32
+
+
+def _rotl(w: jax.Array, r: int) -> jax.Array:
+    if r % BLOCK == 0:
+        return w
+    r = r % BLOCK
+    return (w << jnp.uint32(r)) | (w >> jnp.uint32(BLOCK - r))
+
+
+def _kernel(words_ref, out_ref, *, slopes: Tuple[int, ...]):
+    w = words_ref[...]                      # (bm, 32) uint32
+    outs = []
+    for s in slopes:
+        acc = w[:, 0]
+        for i in range(1, BLOCK):
+            acc = acc ^ _rotl(w[:, i], (s * i) % BLOCK)
+        outs.append(acc)
+    out_ref[...] = jnp.stack(outs, axis=-1)  # (bm, F)
+
+
+@functools.partial(jax.jit, static_argnames=("slopes", "block_m", "interpret"))
+def encode_parity_kernel(words: jax.Array, slopes: Tuple[int, ...] = (1, 2, -1),
+                         block_m: int = 256, interpret: bool = True) -> jax.Array:
+    """words: (n_blocks, 32) uint32 -> parity (n_blocks, len(slopes)) uint32."""
+    n_blocks = words.shape[0]
+    bm = min(block_m, n_blocks)
+    assert n_blocks % bm == 0, (n_blocks, bm)
+    return pl.pallas_call(
+        functools.partial(_kernel, slopes=slopes),
+        grid=(n_blocks // bm,),
+        in_specs=[pl.BlockSpec((bm, BLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, len(slopes)), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, len(slopes)), jnp.uint32),
+        interpret=interpret,
+    )(words)

@@ -1,0 +1,26 @@
+"""Public ECC-encode op: pads, tiles and dispatches the Pallas kernel."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import use_interpret
+from .kernel import BLOCK, encode_parity_kernel
+
+
+def encode_parity(buf: jax.Array, slopes: Tuple[int, ...] = (1, 2, -1),
+                  block_m: int = 256, interpret: bool | None = None) -> jax.Array:
+    """buf: flat uint32 buffer (length multiple of 32) ->
+    (n_blocks, len(slopes)) parity words."""
+    assert buf.ndim == 1 and buf.shape[0] % BLOCK == 0
+    words = buf.reshape(-1, BLOCK)
+    n = words.shape[0]
+    bm = block_m
+    pad = (-n) % bm
+    if pad:
+        words = jnp.pad(words, ((0, pad), (0, 0)))
+    out = encode_parity_kernel(words, slopes=tuple(slopes), block_m=bm,
+                               interpret=use_interpret() if interpret is None else interpret)
+    return out[:n]

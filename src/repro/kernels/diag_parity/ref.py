@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: the reliability-layer encoder."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from ...core.reliability import WordEccConfig, encode_words
+
+
+def encode_parity_ref(words: jax.Array,
+                      slopes: Tuple[int, ...] = (1, 2, -1)) -> jax.Array:
+    return encode_words(words.reshape(-1), WordEccConfig(slopes=slopes))

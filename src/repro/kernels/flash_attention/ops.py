@@ -1,0 +1,24 @@
+"""Public flash-attention op matching the model stack's (B, S, H, hd)
+convention; transposes to head-major, dispatches the kernel."""
+from __future__ import annotations
+
+import jax
+
+from .. import use_interpret
+from .kernel import flash_attention_kernel
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    q_block=512, kv_block=512, interpret: bool | None = None):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) -> (B, Sq, H, hd).
+
+    q_offset must be 0 in the kernel path (full-sequence prefill/training)."""
+    assert q_offset == 0, "kernel path covers full-sequence attention"
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    out = flash_attention_kernel(
+        qh, kh, vh, causal=causal, window=window,
+        block_q=q_block, block_k=kv_block,
+        interpret=use_interpret() if interpret is None else interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,14 @@
+"""Oracle: naive full-matrix attention from the model stack."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...models.attention import naive_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, H, Sq, hd); k/v: (B, KV, Sk, hd) -> (B, H, Sq, hd)."""
+    out = naive_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=causal, window=window)
+    return out.transpose(0, 2, 1, 3)

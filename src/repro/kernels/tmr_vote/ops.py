@@ -1,0 +1,33 @@
+"""Public TMR-vote op: accepts arbitrary-shape float/int arrays, views them
+as packed words, votes per-bit in the Pallas kernel, restores shape/dtype."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import use_interpret
+from ...core.bitops import float_view_u32, u32_view_float
+from .kernel import vote_kernel
+
+_LANES = 512
+
+
+def vote(a: jax.Array, b: jax.Array, c: jax.Array,
+         interpret: bool | None = None) -> jax.Array:
+    """Per-bit 2-of-3 majority of three same-shape arrays."""
+    dtype, shape = a.dtype, a.shape
+    av, bv, cv = (float_view_u32(x).reshape(-1) for x in (a, b, c))
+    n = av.shape[0]
+    pad = (-n) % _LANES
+    if pad:
+        av, bv, cv = (jnp.pad(x, (0, pad)) for x in (av, bv, cv))
+    m = av.shape[0] // _LANES
+    out = vote_kernel(av.reshape(m, _LANES).astype(jnp.uint32),
+                      bv.reshape(m, _LANES).astype(jnp.uint32),
+                      cv.reshape(m, _LANES).astype(jnp.uint32),
+                      block_m=min(256, m), block_n=_LANES,
+                      interpret=use_interpret() if interpret is None else interpret)
+    flat = out.reshape(-1)[:n]
+    if dtype == jnp.bfloat16:
+        flat = flat.astype(jnp.uint16)
+    return u32_view_float(flat, dtype).reshape(shape)

@@ -1,0 +1,2 @@
+"""Oracle: core.tmr per-bit voter."""
+from ...core.tmr import vote_array as vote_ref  # noqa: F401

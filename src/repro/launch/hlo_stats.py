@@ -1,0 +1,101 @@
+"""HLO-text statistics: collective traffic extraction for the roofline.
+
+`cost_analysis()` gives FLOPs and bytes but not collective traffic, so we
+parse the partitioned (per-device SPMD) HLO module: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op contributes its result-shape bytes, with ring-traffic multipliers applied
+when converting to link time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+__all__ = ["CollectiveStats", "parse_collectives", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<rtype>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(?P<rows>\d+),(?P<cols>\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op_bytes: Dict[str, int]           # op kind -> sum of result bytes
+    per_op_count: Dict[str, int]
+    per_op_group: Dict[str, float]         # op kind -> mean group size
+    total_result_bytes: int
+
+    def link_traffic_bytes(self) -> float:
+        """Per-device bytes crossing ICI links, ring-algorithm model:
+        all-reduce moves 2(n-1)/n x result bytes; all-gather and
+        reduce-scatter (n-1)/n x the larger buffer; all-to-all (n-1)/n;
+        collective-permute 1x."""
+        total = 0.0
+        for op, b in self.per_op_bytes.items():
+            n = max(self.per_op_group.get(op, 2.0), 2.0)
+            if op == "all-reduce":
+                total += 2.0 * (n - 1) / n * b
+            elif op in ("all-gather", "reduce-scatter", "all-to-all"):
+                total += (n - 1) / n * b
+            else:  # collective-permute
+                total += b
+        return total
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    per_bytes: Dict[str, int] = defaultdict(int)
+    per_count: Dict[str, int] = defaultdict(int)
+    group_sum: Dict[str, float] = defaultdict(float)
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        # async pairs: count the -start, skip the -done
+        if f"{m.group('op')}-done(" in line:
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("rtype"))
+        per_bytes[op] += b
+        per_count[op] += 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            group_sum[op] += g.group(1).count(",") + 1
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                group_sum[op] += int(gi.group("cols"))
+            else:
+                group_sum[op] += 2.0
+    per_group = {op: group_sum[op] / per_count[op] for op in per_count}
+    return CollectiveStats(dict(per_bytes), dict(per_count), per_group,
+                           sum(per_bytes.values()))

@@ -1,0 +1,24 @@
+"""Production meshes.
+
+Functions, not module constants — importing this module never touches jax
+device state (device count is locked at first jax init, and only the dry-run
+sets the 512-device host-platform flag).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: one pod = 16x16 = 256 chips as
+    ("data", "model"); two pods = 512 chips with a leading "pod" axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU sharding tests (requires forced host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,91 @@
+"""Serving driver: batched prefill + decode with optional TMR voting and
+soft-error injection (the paper's §V applied to model serving).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
+      --batch 4 --prompt-len 64 --gen 32 --tmr serial --inject-p-bit 1e-4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, list_archs
+from ..core.reliability import inject_bit_flips
+from ..core.tmr import vote_array
+from ..models import params as P
+from ..models import transformer as T
+from ..models.steps import make_decode_step, make_prefill_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen2.5-14b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--tmr", default="off", choices=["off", "serial", "parallel"])
+    ap.add_argument("--inject-p-bit", type=float, default=0.0,
+                    help="corrupt each weight bit of each TMR copy w.p. p")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    key = jax.random.PRNGKey(args.seed)
+    params = P.materialize(key, T.model_specs(cfg))
+    cache_len = args.prompt_len + args.gen
+
+    batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len),
+                                          0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["vis_emb"] = jax.random.normal(key, (args.batch, cfg.vis_tokens,
+                                                   cfg.vis_dim), jnp.float32)
+    if cfg.family == "encdec":
+        batch["enc_emb"] = jax.random.normal(key, (args.batch, args.prompt_len,
+                                                   cfg.d_model), jnp.float32)
+
+    prefill = jax.jit(make_prefill_step(cfg, cache_len=cache_len))
+    decode = jax.jit(make_decode_step(cfg))
+
+    def run_copy(p):
+        tok, logits, cache = prefill(p, batch)
+        toks = [tok]
+        for _ in range(args.gen - 1):
+            tok, logits, cache = decode(p, tok, cache)
+            toks.append(tok)
+        return jnp.concatenate(toks, axis=1)
+
+    t0 = time.time()
+    if args.tmr == "off":
+        out = run_copy(params)
+    else:
+        # three copies with independently injected storage corruption; per-bit
+        # majority voting on the generated token ids (serial: sequential;
+        # parallel: 3 replica groups on a real mesh — same result here)
+        copies = []
+        for i in range(3):
+            p = params
+            if args.inject_p_bit:
+                p = inject_bit_flips(params, jax.random.fold_in(key, 100 + i),
+                                     args.inject_p_bit)
+            copies.append(run_copy(p))
+        out = vote_array(*copies)
+    dt = time.time() - t0
+
+    ref = run_copy(params) if (args.tmr != "off" and args.inject_p_bit) else out
+    agree = float((out == ref).mean())
+    tok_s = args.batch * args.gen / dt
+    print(f"[serve] {cfg.name} tmr={args.tmr} p_bit={args.inject_p_bit:g}: "
+          f"{args.batch}x{args.gen} tokens in {dt:.1f}s ({tok_s:.1f} tok/s), "
+          f"agreement with clean run: {agree:.3f}")
+    print("[serve] sample:", np.asarray(out[0, :16]).tolist())
+
+
+if __name__ == "__main__":
+    main()

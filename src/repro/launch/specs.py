@@ -1,0 +1,127 @@
+"""Shape-set registry + abstract input construction for the dry-run.
+
+`input_specs(arch, shape, mesh)` returns weak-type-correct, shardable
+ShapeDtypeStruct stand-ins for every input of the lowered step function —
+no device allocation ever happens for the full configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, get_rules_overrides, get_train_policy
+from ..data.synthetic import make_batch_specs
+from ..models.config import ModelConfig
+from ..models.params import Spec, abstractify
+from ..models.transformer import cache_specs, model_specs
+from ..optim.sharding_rules import opt_spec_tree
+from ..pshard import DEFAULT_RULES, ShardingRules
+
+__all__ = ["SHAPES", "ShapeSpec", "applicable", "arch_rules",
+           "abstract_inputs", "skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+#: encoder memory length for encdec decode shapes (fixed audio context)
+ENCDEC_MEM_LEN = 4096
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return ("long_500k requires sub-quadratic attention; "
+                f"{cfg.family} is full-attention (see DESIGN.md §5)")
+    return None
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    return skip_reason(cfg, shape) is None
+
+
+def arch_rules(arch: str, extra: Optional[dict] = None,
+               serve: bool = False) -> ShardingRules:
+    rules = DEFAULT_RULES.replace(**get_rules_overrides(arch, serve=serve))
+    if extra:
+        rules = rules.replace(**extra)
+    return rules
+
+
+def _mem_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    if cfg.family == "vlm":
+        return cfg.vis_tokens
+    if cfg.family == "encdec":
+        return shape.seq if shape.kind == "train" else ENCDEC_MEM_LEN
+    return 0
+
+
+def abstract_inputs(arch: str, shape_name: str, mesh,
+                    rules: Optional[ShardingRules] = None) -> Dict[str, Any]:
+    """Build all abstract inputs for the (arch, shape) cell.
+
+    Returns a dict with keys depending on shape.kind:
+      train  : state (params+opt), batch
+      prefill: params, batch
+      decode : params, token, cache
+    plus 'cfg', 'rules', 'shape'.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        raise ValueError(f"{arch} x {shape_name} skipped: {reason}")
+    rules = rules or arch_rules(arch)
+
+    pspecs = model_specs(cfg)
+    out: Dict[str, Any] = {"cfg": cfg, "rules": rules, "shape": shape}
+
+    if shape.kind == "train":
+        policy = get_train_policy(arch)
+        out["policy"] = policy
+        params = abstractify(pspecs, mesh, jnp.dtype(policy["param_dtype"]), rules)
+        bspecs = make_batch_specs(cfg, shape.batch, shape.seq,
+                                  mem_len=_mem_len(cfg, shape))
+        batch = abstractify(bspecs, mesh, cfg.cdtype, rules)
+        opt_specs = opt_spec_tree(pspecs)
+        odt = jnp.dtype(policy["opt_dtype"])
+        opt = {
+            "m": abstractify(opt_specs, mesh, odt, rules),
+            "v": abstractify(opt_specs, mesh, odt, rules),
+            "count": abstractify(Spec((), (), "zeros", dtype="int32"), mesh,
+                                 jnp.int32, rules),
+        }
+        out["state"] = {"params": params, "opt": opt}
+        out["batch"] = batch
+        return out
+
+    # serving cells hold bf16 (compute-dtype) parameters
+    params = abstractify(pspecs, mesh, cfg.cdtype, rules)
+    if shape.kind == "prefill":
+        bspecs = make_batch_specs(cfg, shape.batch, shape.seq,
+                                  mem_len=_mem_len(cfg, shape))
+        out["params"] = params
+        out["batch"] = abstractify(bspecs, mesh, cfg.cdtype, rules)
+    else:  # decode
+        cspecs = cache_specs(cfg, shape.batch, shape.seq,
+                             mem_len=_mem_len(cfg, shape))
+        out["params"] = params
+        out["cache"] = abstractify(cspecs, mesh, cfg.cdtype, rules)
+        out["token"] = abstractify(
+            Spec((shape.batch, 1), ("batch", None), dtype="int32"),
+            mesh, jnp.int32, rules)
+    return out

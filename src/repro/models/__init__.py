@@ -1,0 +1,5 @@
+from .config import ModelConfig
+from . import attention, moe, nn, params, rglru, ssm, steps, transformer
+
+__all__ = ["ModelConfig", "attention", "moe", "nn", "params", "rglru", "ssm",
+           "steps", "transformer"]

@@ -1,0 +1,359 @@
+"""Attention: GQA/MQA self-attention with RoPE, blocked online-softmax
+(flash-style) training path, sliding-window (local) variant, cross-attention,
+and single-token KV-cache decode.
+
+The blocked path is the compile/dry-run implementation (memory-bounded,
+cond-skips fully-masked blocks so causal FLOPs stay ~triangular); the Pallas
+kernel in repro.kernels.flash_attention implements the same contract for
+real TPUs and is validated against `naive_attention`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .nn import rms_norm, rope
+from .params import Spec
+from ..pshard import constrain
+
+__all__ = ["attn_specs", "cross_attn_specs", "self_attention", "cross_attention",
+           "decode_self_attention", "blocked_attention", "naive_attention"]
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# core attention math
+# --------------------------------------------------------------------------
+
+def naive_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Oracle: full score matrix. q (B,Sq,H,hd); k,v (B,Sk,KV,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _block_mask(q_start, k_start, q_block, kv_block, causal, window):
+    qpos = q_start + jnp.arange(q_block)[:, None]
+    kpos = k_start + jnp.arange(kv_block)[None, :]
+    mask = jnp.ones((q_block, kv_block), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def _block_pred(q_start, k_start, q_block, kv_block, causal, window):
+    """Scalar predicate: does this (q, kv) block pair have any unmasked
+    entry?  lax.cond on it skips fully-masked blocks so causal work stays
+    ~triangular and sliding-window work stays O(S*W)."""
+    pred = jnp.array(True)
+    if causal:
+        pred &= k_start < q_start + q_block
+    if window:
+        pred &= (k_start + kv_block) > (q_start - window + 1)
+    return pred
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, q_block, kv_block):
+    """Online-softmax blocked attention forward.
+
+    Returns out (B,Sq,H,hd) and lse (B,KV,G,Sq) fp32 for the backward."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    nq, nk = Sq // q_block, Sk // kv_block
+    scale = 1.0 / (hd ** 0.5)
+
+    qg = q.reshape(B, nq, q_block, KV, G, hd)
+    kb = k.reshape(B, nk, kv_block, KV, hd)
+    vb = v.reshape(B, nk, kv_block, KV, hd)
+
+    def q_step(_, iq):
+        qi = qg[:, iq].astype(jnp.float32) * scale        # (B,qb,KV,G,hd)
+        q_start = q_offset + iq * q_block
+
+        def kv_step(carry, ik):
+            k_start = ik * kv_block
+
+            def compute(operands):
+                (m, l, acc), ik = operands
+                ki = kb[:, ik].astype(jnp.float32)         # (B,kb,KV,hd)
+                vi = vb[:, ik].astype(jnp.float32)
+                s = jnp.einsum("bqkgd,bskd->bkgqs", qi, ki)  # (B,KV,G,qb,kb)
+                s = jnp.where(_block_mask(q_start, k_start, q_block, kv_block,
+                                          causal, window), s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + p.sum(axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bkgqs,bskd->bkgqd", p, vi)
+                return m_new, l_new, acc_new
+
+            pred = _block_pred(q_start, k_start, q_block, kv_block, causal, window)
+            return jax.lax.cond(pred, compute, lambda o: o[0],
+                                (carry, ik)), None
+
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,KV,G,qb,hd)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))           # (B,KV,G,qb)
+        return None, (out.transpose(0, 3, 1, 2, 4), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd).astype(q.dtype)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, KV, G, Sq)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def blocked_attention_core(q, k, v, causal, window, q_offset, q_block, kv_block):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset, q_block, kv_block)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, q_offset, q_block, kv_block):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_offset, q_block, kv_block)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, q_offset, q_block, kv_block, res, dout):
+    """Flash-style backward: recompute p per block from (q,k,lse); never
+    store the (Sq, Sk) probability matrix.  This is what keeps the 32K-token
+    train/prefill cells inside HBM."""
+    q, k, v, out, lse = res
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    nq, nk = Sq // q_block, Sk // kv_block
+    scale = 1.0 / (hd ** 0.5)
+    f32 = jnp.float32
+
+    qg = q.reshape(B, nq, q_block, KV, G, hd)
+    kb = k.reshape(B, nk, kv_block, KV, hd)
+    vb = v.reshape(B, nk, kv_block, KV, hd)
+    dog = dout.reshape(B, nq, q_block, KV, G, hd)
+    lse_q = lse.reshape(B, KV, G, nq, q_block)
+    # delta[b,kv,g,s] = sum_d dout * out
+    delta = (dout.astype(f32) * out.astype(f32)).sum(-1)       # (B,Sq,H)
+    delta = delta.reshape(B, nq, q_block, KV, G).transpose(0, 3, 4, 1, 2)
+
+    def q_step(carry, iq):
+        dk_acc, dv_acc = carry                                  # (B,Sk,KV,hd) f32
+        qi = qg[:, iq].astype(f32) * scale
+        doi = dog[:, iq].astype(f32)
+        lse_i = lse_q[:, :, :, iq]                              # (B,KV,G,qb)
+        delta_i = delta[:, :, :, iq]                            # (B,KV,G,qb)
+        q_start = q_offset + iq * q_block
+
+        def kv_step(carry, ik):
+            def compute(operands):
+                (dq_b, dk_acc, dv_acc), ik = operands
+                k_start = ik * kv_block
+                ki = jax.lax.dynamic_slice_in_dim(kb, ik, 1, 1)[:, 0].astype(f32)
+                vi = jax.lax.dynamic_slice_in_dim(vb, ik, 1, 1)[:, 0].astype(f32)
+                s = jnp.einsum("bqkgd,bskd->bkgqs", qi, ki)
+                s = jnp.where(_block_mask(q_start, k_start, q_block, kv_block,
+                                          causal, window), s, NEG_INF)
+                p = jnp.exp(s - lse_i[..., None])               # (B,KV,G,qb,kb)
+                dv_blk = jnp.einsum("bkgqs,bqkgd->bskd", p, doi)
+                dp = jnp.einsum("bqkgd,bskd->bkgqs", doi, vi)
+                ds = p * (dp - delta_i[..., None])
+                dq_b = dq_b + jnp.einsum("bkgqs,bskd->bqkgd", ds, ki) * scale
+                dk_blk = jnp.einsum("bkgqs,bqkgd->bskd", ds, qi)
+                start = ik * kv_block
+                upd_k = jax.lax.dynamic_slice_in_dim(dk_acc, start, kv_block, 1)
+                dk_acc = jax.lax.dynamic_update_slice_in_dim(
+                    dk_acc, upd_k + dk_blk, start, 1)
+                upd_v = jax.lax.dynamic_slice_in_dim(dv_acc, start, kv_block, 1)
+                dv_acc = jax.lax.dynamic_update_slice_in_dim(
+                    dv_acc, upd_v + dv_blk, start, 1)
+                return dq_b, dk_acc, dv_acc
+
+            pred = _block_pred(q_start, ik * kv_block, q_block, kv_block,
+                               causal, window)
+            return jax.lax.cond(pred, compute, lambda o: o[0],
+                                (carry, ik)), None
+
+        dq0 = jnp.zeros((B, q_block, KV, G, hd), f32)
+        (dq_b, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_b
+
+    dk0 = jnp.zeros((B, Sk, KV, hd), f32)
+    dv0 = jnp.zeros((B, Sk, KV, hd), f32)
+    (dk, dv), dqs = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(nq))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+blocked_attention_core.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def blocked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                      q_block=512, kv_block=1024):
+    """Flash-style blocked attention with a recompute (custom-VJP) backward.
+    Fully-masked blocks are lax.cond-skipped in both directions."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+
+    def fit(block, S):
+        block = min(block, S)
+        while S % block:            # e.g. 1600 image tokens with block 1024
+            block //= 2
+        return max(block, 1)
+
+    q_block = fit(q_block, Sq)
+    kv_block = fit(kv_block, Sk)
+    return blocked_attention_core(q, k, v, causal, window, q_offset,
+                                  q_block, kv_block)
+
+
+def attention(q, k, v, cfg: ModelConfig, *, causal=True, window=0, q_offset=0):
+    if cfg.attention_impl == "naive":
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+    if cfg.attention_impl == "pallas":
+        from ..kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset,
+                                      q_block=cfg.q_block, kv_block=cfg.kv_block)
+    return blocked_attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, q_block=cfg.q_block,
+                             kv_block=cfg.kv_block)
+
+
+# --------------------------------------------------------------------------
+# modules
+# --------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    specs = {
+        "ln": Spec((d,), ("model_dim",), "zeros"),
+        "wq": Spec((d, H * hd), ("model_dim", "heads"), "scaled"),
+        "wkv": Spec((d, 2 * KV * hd), ("model_dim", "kv_heads"), "scaled"),
+        "wo": Spec((H * hd, d), ("heads", "model_dim"), "scaled"),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = Spec((H * hd,), ("heads",), "zeros")
+        specs["bkv"] = Spec((2 * KV * hd,), ("kv_heads",), "zeros")
+    return specs
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    kv = x @ p["wkv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        kv = kv + p["bkv"].astype(dt)
+    q = q.reshape(B, S, H, hd)
+    k = kv[..., : KV * hd].reshape(B, S, KV, hd)
+    v = kv[..., KV * hd:].reshape(B, S, KV, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def self_attention(p, cfg: ModelConfig, x, *, causal=True, window=0):
+    """Training/prefill self-attention block body (pre-norm, pre-residual).
+
+    Returns (output, (k, v)) so prefill can build a cache."""
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, h, positions)
+    o = attention(q, k, v, cfg, causal=causal, window=window)
+    o = constrain(o, "batch", None, "heads", None)
+    out = o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+    return out, (k, v)
+
+
+def decode_self_attention(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
+                          window=0):
+    """Single-token decode. x: (B,1,D); cache_k/v: (B,S,KV,hd); pos: scalar
+    int32 — number of tokens already in the cache (== index to write).
+
+    With a sliding window the cache is a ring buffer of size window."""
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    B = h.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    G = H // KV
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, h, positions)
+    S = cache_k.shape[1]
+    slot = pos % S if window else pos
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, slot, 0, 0))
+    qg = q.reshape(B, 1, KV, G, hd).astype(jnp.float32)
+    kc = cache_k.astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc) / (hd ** 0.5)
+    # ring buffer: entries older than the window are overwritten, so slot
+    # validity is simply idx <= pos in both the linear and ring cases.
+    valid = jnp.arange(S) <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    pmax = scores.max(axis=-1, keepdims=True)
+    e = jnp.exp(scores - pmax)
+    probs = e / e.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", probs, cache_v.astype(jnp.float32))
+    o = o.reshape(B, 1, H * hd).astype(x.dtype)
+    out = o @ p["wo"].astype(x.dtype)
+    return out, cache_k, cache_v
+
+
+def cross_attn_specs(cfg: ModelConfig, mem_dim: Optional[int] = None) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    md = mem_dim or cfg.d_model
+    return {
+        "ln": Spec((d,), ("model_dim",), "zeros"),
+        "wq": Spec((d, H * hd), ("model_dim", "heads"), "scaled"),
+        "wkv": Spec((md, 2 * KV * hd), ("model_dim", "kv_heads"), "scaled"),
+        "wo": Spec((H * hd, d), ("heads", "model_dim"), "scaled"),
+        "gate": Spec((), (), "zeros"),
+    }
+
+
+def cross_attention(p, cfg: ModelConfig, x, memory):
+    """Cross-attention to a (B, M, mem_dim) memory (vision patches / encoder
+    states).  Gated (tanh) as in Llama-3.2 vision cross-attn layers."""
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    B, S, _ = h.shape
+    M = memory.shape[1]
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    dt = x.dtype
+    q = (h @ p["wq"].astype(dt)).reshape(B, S, H, hd)
+    kv = memory.astype(dt) @ p["wkv"].astype(dt)
+    k = kv[..., : KV * hd].reshape(B, M, KV, hd)
+    v = kv[..., KV * hd:].reshape(B, M, KV, hd)
+    o = attention(q, k, v, cfg, causal=False)
+    out = o.reshape(B, S, -1) @ p["wo"].astype(dt)
+    return jnp.tanh(p["gate"].astype(jnp.float32)).astype(dt) * out

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts layer: token-choice top-k routing with sort-based
+capacity dispatch, organized per data-parallel *group*.
+
+GSPMD cannot shard a scatter whose indices permute tokens globally (it
+replicates the buffers — measured +25 GiB/device on llama4 prefill_32k).
+Instead tokens are reshaped to (G, T/G, D) where G = the DP shard count:
+every sort/scatter/gather is then *local to a group* (batched over the
+sharded leading dim), and the only cross-device movement is the
+(G, E, C, D) dispatch buffer resharding from data-sharded groups to
+model-sharded experts — i.e. exactly the all-to-all a hand-written
+expert-parallel implementation performs.
+
+Supports llama4-style (128 experts, top-1, + shared expert, interleaved)
+and phi3.5-moe-style (16 experts, top-2) from the same code path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .nn import mlp_specs, mlp_apply
+from .params import Spec
+from ..pshard import ambient_mesh, ambient_rules, constrain
+
+__all__ = ["moe_specs", "moe_apply"]
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.moe_experts, cfg.moe_dff or cfg.d_ff
+    gated = cfg.act in ("swiglu", "geglu")
+    specs = {
+        "router": Spec((d, e), ("model_dim", None), "scaled"),
+        "w_up": Spec((e, d, 2 * f if gated else f), ("expert", "model_dim", "ff"), "scaled"),
+        "w_down": Spec((e, f, d), ("expert", "ff", "model_dim"), "scaled"),
+    }
+    if cfg.moe_shared_expert:
+        specs["shared"] = mlp_specs(cfg)
+    return specs
+
+
+def _dp_groups(n_tokens: int) -> int:
+    """Number of DP shards the token dim is split over (1 without a mesh)."""
+    mesh = ambient_mesh()
+    if mesh is None:
+        return 1
+    g = 1
+    for ax in ambient_rules().axes_for("batch"):
+        if ax in mesh.axis_names:
+            g *= mesh.shape[ax]
+    while g > 1 and n_tokens % g:
+        g //= 2
+    return max(g, 1)
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(math.ceil(cfg.capacity_factor * cfg.moe_topk * tokens_per_group
+                      / cfg.moe_experts))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (output (B,S,D), aux load-balance loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.moe_experts, cfg.moe_topk
+    f = cfg.moe_dff or cfg.d_ff
+    T = B * S
+    dt = x.dtype
+    G = _dp_groups(T)
+    Tl = T // G
+    C = _capacity(cfg, Tl)
+    xg = x.reshape(G, Tl, D)
+    xg = constrain(xg, "batch", None, None)
+
+    # --- routing (fp32) ------------------------------------------------------
+    logits = xg.astype(jnp.float32) @ p["router"].astype(jnp.float32)  # (G,Tl,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)                    # (G,Tl,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style, computed globally)
+    me = probs.mean(axis=(0, 1))                                       # (E,)
+    ce = (jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)
+          .sum(axis=(0, 1, 2))) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # --- per-group sort-based capacity dispatch -------------------------------
+    flat_e = expert_idx.reshape(G, Tl * K)                             # token-major
+    flat_g = gate_vals.reshape(G, Tl * K)
+    order = jnp.argsort(flat_e, axis=1, stable=True)                   # (G,TlK)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    sorted_tok = order // K
+    # exclusive-cumsum expert counts -> start offsets per group
+    cnt = jax.nn.one_hot(flat_e, E, dtype=jnp.int32).sum(axis=1)       # (G,E)
+    starts = jnp.cumsum(cnt, axis=1) - cnt                             # (G,E)
+    pos = jnp.arange(Tl * K)[None, :] - jnp.take_along_axis(starts, sorted_e, axis=1)
+    keep = pos < C
+    dest = jnp.where(keep, sorted_e * C + pos, E * C)                  # pad row
+
+    src = jnp.take_along_axis(xg, sorted_tok[..., None], axis=1).astype(dt)
+
+    def scatter_rows(buf, idx, vals):
+        return buf.at[idx].set(vals, mode="drop")
+
+    buf = jnp.zeros((G, E * C + 1, D), dt)
+    buf = jax.vmap(scatter_rows)(buf, dest, src)
+    expert_in = buf[:, : E * C].reshape(G, E, C, D)
+    expert_in = constrain(expert_in, "batch", "expert", None, None)
+
+    # --- expert FFN (experts sharded over "model": the all-to-all happens
+    # in the resharding right above) -------------------------------------------
+    h = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"].astype(dt))
+    if cfg.act in ("swiglu", "geglu"):
+        u, g_ = h[..., :f], h[..., f:]
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = u * act(g_)
+    else:
+        h = jax.nn.relu(h) ** 2 if cfg.act == "relu2" else jax.nn.silu(h)
+    h = constrain(h, "batch", "expert", None, "ff")
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    expert_out = constrain(expert_out, "batch", "expert", None, None)
+
+    # --- combine (back to data-sharded groups) ---------------------------------
+    # combine in the compute dtype: fp32 cotangents here force fp32 grad
+    # dots + fp32 FSDP all-gathers in the backward (measured +7.5 GiB/dev on
+    # llama4 train_4k); each token sums only top-k contributions so bf16
+    # accumulation is safe.
+    rows = expert_out.reshape(G, E * C, D)
+    safe = jnp.where(keep, dest, 0)
+    gathered = jnp.take_along_axis(rows, safe[..., None], axis=1)
+    gathered = jnp.where(keep[..., None], gathered, 0).astype(dt)
+    wsorted = jnp.take_along_axis(flat_g, order, axis=1)
+    contrib = gathered * wsorted[..., None].astype(dt)
+
+    def combine_rows(tok, vals):
+        return jnp.zeros((Tl, D), dt).at[tok].add(vals)
+
+    y = jax.vmap(combine_rows)(sorted_tok, contrib)                    # (G,Tl,D)
+    y = constrain(y, "batch", None, None)
+
+    if cfg.moe_shared_expert:
+        y = y + mlp_apply(p["shared"], cfg, xg)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,109 @@
+"""Shared neural-net primitives: norms, activations, MLPs, RoPE, embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import Spec
+from ..pshard import constrain
+
+__all__ = ["rms_norm", "mlp_specs", "mlp_apply", "rope", "act_fn",
+           "embed_specs", "softmax_xent", "layer_norm"]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    # NOTE: deliberately avoids `x.astype(f32)` on the raw input.  Under
+    # scan+remat, XLA hoists a loop-invariant convert of the *entire saved
+    # residual stack* to fp32 (2x the dominant training buffer — measured
+    # +11.9 GiB/device on deepseek-67b train_4k).  Converting after the
+    # elementwise square keeps the reduction in fp32 without a hoistable
+    # convert(x) in the backward graph.  See EXPERIMENTS.md §Perf.
+    dt = x.dtype
+    ms = jnp.mean(jnp.square(x).astype(jnp.float32), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps)
+    return x * inv.astype(dt) * (1.0 + scale).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str, x: jax.Array) -> jax.Array:
+    if name == "relu2":                    # nemotron squared-ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)                  # swiglu/geglu gate handled by caller
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    gated = cfg.act in ("swiglu", "geglu")
+    specs = {
+        "w_up": Spec((d, 2 * f if gated else f), ("model_dim", "ff")),
+        "w_down": Spec((f, d), ("ff", "model_dim")),
+    }
+    return specs
+
+
+def mlp_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              d_ff: Optional[int] = None) -> jax.Array:
+    f = d_ff or cfg.d_ff
+    dt = x.dtype
+    h = x @ p["w_up"].astype(dt)
+    if cfg.act in ("swiglu", "geglu"):
+        u, g = h[..., :f], h[..., f:]
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = u * act(g)
+    else:
+        h = act_fn(cfg.act, h)
+    h = constrain(h, "batch", None, "ff")
+    return h @ p["w_down"].astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]                             # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    v = cfg.padded_vocab
+    # the INPUT table uses its own logical axis: sharding the gather's vocab
+    # dim costs an all-reduce of (B,S,D) per step (measured 2 GiB/dev f32 on
+    # deepseek prefill); the default rule leaves vocab_in unsharded and
+    # FSDP-shards d_model instead, making the gather collective-free.
+    specs = {"tok": Spec((v, cfg.d_model), ("vocab_in", "model_dim"), "normal", 0.02)}
+    if not cfg.tie_embeddings:
+        specs["head"] = Spec((cfg.d_model, v), ("model_dim", "vocab"))
+    return specs
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross entropy; logits (..., V) may be vocab-sharded
+    (GSPMD partitions the log-sum-exp reductions)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

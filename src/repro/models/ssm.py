@@ -1,0 +1,179 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation within chunks, a linear `lax.scan` recurrence across chunk
+states (O(S) memory, sub-quadratic compute — this is why the ssm family
+runs the 500K-token shape).  Decode is the pure recurrence on a
+(B, H, P, N) state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .nn import rms_norm
+from .params import Spec
+from ..pshard import constrain
+
+__all__ = ["mamba_specs", "mamba_forward", "mamba_decode_step", "mamba_cache_specs"]
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    return {
+        "ln": Spec((d,), ("model_dim",), "zeros"),
+        # order: [z (di) | x (di) | B (n) | C (n) | dt (h)]
+        "in_proj": Spec((d, 2 * di + 2 * n + h), ("model_dim", "ff"), "scaled"),
+        "conv_w": Spec((cfg.conv_width, conv_dim), (None, "ff"), "scaled"),
+        "conv_b": Spec((conv_dim,), ("ff",), "zeros"),
+        "A_log": Spec((h,), (None,), "ones"),
+        "D": Spec((h,), (None,), "ones"),
+        "dt_bias": Spec((h,), (None,), "zeros"),
+        "norm": Spec((di,), ("ff",), "zeros"),
+        "out_proj": Spec((di, d), ("ff", "model_dim"), "scaled"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. xbc: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for t in range(W):
+        out = out + pad[:, t: t + xbc.shape[1], :].astype(jnp.float32) * w[t].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """SSD scan.  x: (B,S,H,P); dt: (B,S,H) (post-softplus);
+    A: (H,) negative; Bm/Cm: (B,S,N) (single group).  Returns (B,S,H,P) and
+    the final state (B,H,P,N)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    S_orig = S
+    pad = (-S) % chunk
+    if pad:
+        # identity padding: dt = 0 -> zero input contribution and unit decay,
+        # so the final state is exact and padded outputs are discarded
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    c = S // chunk
+    f32 = jnp.float32
+    xd = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(Bsz, c, chunk, H, P)
+    a = (dt.astype(f32) * A.astype(f32)).reshape(Bsz, c, chunk, H)   # log-decay
+    B_ = Bm.astype(f32).reshape(Bsz, c, chunk, N)
+    C_ = Cm.astype(f32).reshape(Bsz, c, chunk, N)
+
+    a_cum = jnp.cumsum(a, axis=2)                                   # (B,c,T,H)
+    # intra-chunk (attention-like): L[i,j] = exp(a_cum[i] - a_cum[j]) for j<=i
+    seg = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]         # (B,c,T,T,H)
+    ti = jnp.arange(chunk)
+    causal = (ti[:, None] >= ti[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: the masked (j > i) entries are positive and overflow,
+    # and inf in the untaken where-branch poisons the backward with NaNs
+    L = jnp.exp(jnp.where(causal, seg, -1e30))
+    scores = jnp.einsum("bcin,bcjn->bcij", C_, B_)                  # (B,c,T,T)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, L, xd)
+
+    # chunk summary states: sum_j exp(a_cum[last] - a_cum[j]) * B_j x_j
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)             # (B,c,T,H)
+    chunk_states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", B_, decay_states, xd)
+
+    # inter-chunk linear recurrence (lax.scan -> O(c), not O(c^2))
+    total_decay = jnp.exp(a_cum[:, :, -1, :])                        # (B,c,H)
+
+    def step(s, inp):
+        dec, cs = inp                                               # (B,H), (B,H,P,N)
+        s_new = s * dec[..., None, None] + cs
+        return s_new, s                                             # emit state BEFORE chunk
+
+    s0 = jnp.zeros((Bsz, H, P, N), f32)
+    final_state, prev_states = jax.lax.scan(
+        step, s0, (total_decay.transpose(1, 0, 2), chunk_states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)              # (B,c,H,P,N)
+
+    # inter-chunk contribution
+    state_decay = jnp.exp(a_cum)                                    # (B,c,T,H)
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", C_, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)[:, :S_orig]
+    return y, final_state
+
+
+def mamba_forward(p: dict, cfg: ModelConfig, x: jax.Array):
+    """Full-sequence forward (train/prefill). Returns (out, (conv_tail, state))."""
+    B, S, D = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dt_ = x.dtype
+    hin = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = hin @ p["in_proj"].astype(dt_)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_tail = xbc[:, -(cfg.conv_width - 1):, :]                   # decode cache
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xin = xbc[..., :di].reshape(B, S, h, cfg.ssm_headdim)
+    Bm = xbc[..., di: di + n]
+    Cm = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, state = _ssd_chunked(xin, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xin.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(dt_), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(dt_), (conv_tail, state.astype(jnp.float32))
+
+
+def mamba_cache_specs(cfg: ModelConfig, batch: int) -> dict:
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    return {
+        "conv": Spec((batch, cfg.conv_width - 1, conv_dim), ("batch", None, "ff"), "zeros"),
+        "state": Spec((batch, h, cfg.ssm_headdim, n), ("batch", None, None, None), "zeros", dtype="float32"),
+    }
+
+
+def mamba_decode_step(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict):
+    """Single-token recurrence.  x: (B,1,D); cache: {conv (B,W-1,C), state}."""
+    B = x.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dt_ = x.dtype
+    hin = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = hin @ p["in_proj"].astype(dt_)
+    z, xbc_t, dt_raw = _split_proj(cfg, zxbcdt)                     # (B,1,*)
+    window = jnp.concatenate([cache["conv"], xbc_t], axis=1)        # (B,W,C)
+    conv_out = (window.astype(jnp.float32) * p["conv_w"].astype(jnp.float32)[None]
+                ).sum(axis=1, keepdims=True) + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out).astype(dt_)                         # (B,1,C)
+    xin = xbc[..., :di].reshape(B, h, cfg.ssm_headdim)
+    Bm = xbc[:, 0, di: di + n]                                      # (B,N)
+    Cm = xbc[:, 0, di + n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))        # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None, :])                                # (B,H)
+    s = cache["state"]                                              # (B,H,P,N)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xin.astype(jnp.float32), Bm.astype(jnp.float32))
+    s = s * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), s)
+    y = y + xin.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, di) * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(dt_), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt_)
+    new_cache = {"conv": window[:, 1:, :], "state": s}
+    return out, new_cache

@@ -1,0 +1,169 @@
+"""Train / serve step builders.
+
+Loss is computed in sequence chunks against the (possibly vocab-sharded)
+head so (B, S, V) logits are never resident: at 1M tokens x 256K vocab
+that's the difference between 1 TB of fp32 logits and a bounded scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .nn import softmax_xent
+from .transformer import cache_specs, decode_step, forward, prefill
+from ..optim import AdamWConfig, adamw_update, compress_decompress, \
+    init_error_state, init_opt_state
+from ..pshard import constrain, constrain_tree
+
+__all__ = ["head_weights", "chunked_xent", "make_loss_fn", "make_train_step",
+           "make_prefill_step", "make_decode_step"]
+
+
+def head_weights(params: dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"]["tok"].T            # (D, V)
+    return params["embed"]["head"]
+
+
+def chunked_xent(hidden: jax.Array, head: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None, chunk: int = 512) -> jax.Array:
+    """Mean next-token xent over (B,S) in S-chunks.  hidden (B,S,D)."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # irregular small sequences: single chunk
+    n = S // chunk
+    hc = hidden.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    mc = (mask.reshape(B, n, chunk).transpose(1, 0, 2)
+          if mask is not None else jnp.ones_like(lc, jnp.float32))
+
+    @jax.checkpoint
+    def chunk_nll(h, l, m):
+        logits = (h @ head.astype(h.dtype)).astype(jnp.float32)
+        logits = constrain(logits, "batch", None, "vocab")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        return ((lse - ll) * m).sum()
+
+    def body(carry, xs):
+        h, l, m = xs
+        return (carry[0] + chunk_nll(h, l, m), carry[1] + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        hidden, aux = forward(params, cfg, batch)
+        labels = batch["tokens"][:, 1:]
+        h = hidden[:, :-1, :]
+        mask = batch.get("mask")
+        mask = mask[:, 1:] if mask is not None else None
+        loss = chunked_xent(h, head_weights(params, cfg), labels, mask)
+        total = loss + cfg.router_aux_weight * aux
+        return total, {"loss": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    grad_compression: bool = False, microbatches: int = 1,
+                    param_pspecs=None, grad_dtype=jnp.float32):
+    """train_step(state, batch) -> (state, metrics).
+
+    state = {params, opt: {m, v, count}, [err]}.
+
+    microbatches > 1 enables gradient accumulation: the global batch is
+    scanned in K slices so per-layer activation residuals scale with B/K —
+    this is what fits 95-layer x 1M-token steps in 16 GB/chip HBM.
+    param_pspecs (PartitionSpec tree) pins the fp32 gradient accumulator to
+    the parameter shardings — without it XLA materializes the accumulator
+    with whatever sharding propagation picks (often dropping the FSDP axis,
+    a 16x memory regression)."""
+    loss_fn = make_loss_fn(cfg)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+            return grads, total, metrics
+        K = microbatches
+
+        def resplit(x):
+            B = x.shape[0]
+            assert B % K == 0, (B, K)
+            x = x.reshape((K, B // K) + x.shape[1:])
+            return constrain(x, None, "batch", *([None] * (x.ndim - 2)))
+
+        mb = jax.tree.map(resplit, batch)
+
+        def micro(carry, b):
+            gsum, lsum, asum = carry
+            (total, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, b)
+            gsum = jax.tree.map(lambda a, x: (a.astype(jnp.float32)
+                                              + x.astype(jnp.float32)).astype(a.dtype),
+                                gsum, g)
+            gsum = constrain_tree(gsum, param_pspecs)
+            return (gsum, lsum + total, asum + metrics["aux"]), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype), params)
+        g0 = constrain_tree(g0, param_pspecs)
+        (gsum, lsum, asum), _ = jax.lax.scan(
+            micro, (g0, jnp.zeros(()), jnp.zeros(())), mb)
+        grads = jax.tree.map(lambda g: g / K, gsum)
+        return grads, lsum / K, {"loss": lsum / K, "aux": asum / K}
+
+    def train_step(state, batch):
+        grads, total, metrics = grads_of(state["params"], batch)
+        if grad_compression:
+            grads, err = compress_decompress(grads, state["err"])
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, state["opt"], state["params"])
+        new_state = {"params": new_params, "opt": new_opt}
+        if grad_compression:
+            new_state["err"] = err
+        metrics = {"total": total, **metrics, **opt_metrics}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(params, grad_compression: bool = False) -> dict:
+    state = {"params": params, "opt": init_opt_state(params)}
+    if grad_compression:
+        state["err"] = init_error_state(params)
+    return state
+
+
+def _logits_last(params, cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
+    logits = (hidden @ head_weights(params, cfg).astype(hidden.dtype))
+    return constrain(logits.astype(jnp.float32), "batch", None, "vocab")
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: Optional[int] = None):
+    """prefill_step(params, batch) -> (next_token (B,1), logits, cache)."""
+
+    def prefill_step(params, batch):
+        h_last, cache = prefill(params, cfg, batch, cache_len)
+        logits = _logits_last(params, cfg, h_last)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """decode_fn(params, token (B,1), cache) -> (next_token, logits, cache)."""
+
+    def decode_fn(params, token, cache):
+        h, cache = decode_step(params, cfg, token, cache)
+        logits = _logits_last(params, cfg, h)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits, cache
+
+    return decode_fn

@@ -1,0 +1,6 @@
+from .adamw import AdamWConfig, adamw_update, init_opt_state, warmup_cosine
+from .compression import compress_decompress, init_error_state
+from .sharding_rules import opt_spec_tree
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "warmup_cosine",
+           "compress_decompress", "init_error_state", "opt_spec_tree"]

@@ -1,0 +1,37 @@
+"""ZeRO-1 sharding for optimizer state.
+
+Parameters are TP-sharded over "model"; the Adam moments (2x fp32 the size
+of the params) would otherwise be replicated across the "data"/"pod" axes.
+We derive moment Specs from parameter Specs by assigning the largest
+physically-replicated dim the logical axis "zero" (mapped to the data axis
+in ShardingRules), so m/v shard over data — ZeRO stage 1."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from ..models.params import Spec
+from ..pshard import DEFAULT_RULES
+
+__all__ = ["opt_spec_tree"]
+
+_REPLICATED = (None, "model_dim", "seq")  # logicals that resolve to ()
+
+
+def _zero_shard(s: Spec) -> Spec:
+    # pick the largest dim whose logical axis is physically replicated
+    best, best_size = None, 0
+    for i, (size, name) in enumerate(zip(s.shape, s.axes)):
+        if name in _REPLICATED and size > best_size:
+            best, best_size = i, size
+    if best is None:
+        return Spec(s.shape, s.axes, "zeros")
+    axes = tuple("zero" if i == best else a for i, a in enumerate(s.axes))
+    return Spec(s.shape, axes, "zeros")
+
+
+def opt_spec_tree(param_specs: Any) -> Any:
+    """Spec tree for one Adam moment (m or v), ZeRO-1 sharded."""
+    return jax.tree.map(_zero_shard, param_specs,
+                        is_leaf=lambda x: isinstance(x, Spec))

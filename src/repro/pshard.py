@@ -1,0 +1,148 @@
+"""Logical-axis sharding: one place that maps model-logical dimension names
+to physical mesh axes.
+
+Models annotate tensors with *logical* axes ("batch", "ff", "kv_seq", ...);
+the launcher installs an ambient mesh + a ShardingRules table; resolution
+checks divisibility so small/odd dims degrade to replication instead of
+erroring.  The §Perf hillclimb edits ShardingRules, not model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "ambient_mesh", "use_mesh_and_rules",
+           "spec_for", "constrain", "named_sharding"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical dim name -> tuple of mesh axis names (in sharding order)."""
+
+    table: Dict[str, Tuple[str, ...]] = dataclasses.field(default_factory=dict)
+
+    def axes_for(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        return self.table.get(logical, ())
+
+    def replace(self, **updates) -> "ShardingRules":
+        t = dict(self.table)
+        for k, v in updates.items():
+            t[k] = tuple(v) if v else ()
+        return ShardingRules(t)
+
+
+#: default GSPMD strategy: DP over (pod, data); TP/EP/vocab over model;
+#: FSDP (weight d_model dim over data) — activations keep d_model
+#: replicated because the batch dim claims the data axis first.
+DEFAULT_RULES = ShardingRules({
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "vocab_in": (),   # input embedding gather: see models/nn.embed_specs
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "expert": ("model",),
+    "model_dim": ("data",),   # FSDP: weight matrices 2-D sharded (data x model)
+    "kv_seq": ("model",),     # decode KV caches: shard sequence when heads can't be
+    "seq": (),
+    "zero": ("data",),        # optimizer-state ZeRO-1 axis
+})
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: ShardingRules = DEFAULT_RULES
+
+
+_CTX = _Ctx()
+
+
+def ambient_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def ambient_rules() -> ShardingRules:
+    return _CTX.rules
+
+
+@contextlib.contextmanager
+def use_mesh_and_rules(mesh: Optional[Mesh], rules: ShardingRules = DEFAULT_RULES):
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def _resolve_dim(size: int, logical: Optional[str], mesh: Mesh,
+                 rules: ShardingRules):
+    axes = [a for a in rules.axes_for(logical) if a in mesh.axis_names]
+    if not axes:
+        return None
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if size % total != 0:
+        return None  # degrade to replication rather than erroring
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None,
+             rules: Optional[ShardingRules] = None) -> P:
+    """PartitionSpec for a tensor with the given logical axes, with
+    divisibility-checked degradation.  Mesh axes are never used twice."""
+    mesh = mesh or ambient_mesh()
+    rules = rules or ambient_rules()
+    if mesh is None:
+        return P()
+    parts, used = [], set()
+    for size, name in zip(shape, logical):
+        r = _resolve_dim(size, name, mesh, rules)
+        flat = r if isinstance(r, tuple) else ((r,) if r else ())
+        if r is not None and not (set(flat) & used):
+            parts.append(r)
+            used.update(flat)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def named_sharding(shape, logical, mesh=None, rules=None) -> Optional[NamedSharding]:
+    mesh = mesh or ambient_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(shape, logical, mesh, rules))
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without a mesh."""
+    mesh = ambient_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, logical, mesh, ambient_rules())
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_tree(tree, pspec_tree):
+    """with_sharding_constraint a pytree against a PartitionSpec tree
+    (used to pin e.g. gradient accumulators to the parameter shardings);
+    no-op when pspec_tree is None or there is no ambient mesh."""
+    mesh = ambient_mesh()
+    if mesh is None or pspec_tree is None:
+        return tree
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s)),
+        tree, pspec_tree)

@@ -1,0 +1,4 @@
+from .monitor import HeartbeatMonitor, StragglerPolicy
+from .loop import TrainLoop, LoopConfig
+
+__all__ = ["HeartbeatMonitor", "StragglerPolicy", "TrainLoop", "LoopConfig"]

@@ -1,0 +1,68 @@
+"""Heartbeat / straggler monitoring.
+
+At 1000+ nodes the failure model is: slow nodes (stragglers), dead nodes
+(preemption/hardware), and silent data corruption (the paper's subject).
+The monitor tracks per-step wall times, flags statistical stragglers, and
+exposes a decision: CONTINUE / CHECKPOINT_NOW / RESTART.  In a real
+deployment the same policy runs per-host and feeds the cluster scheduler;
+here it drives the TrainLoop's simulated fault handling and is unit-tested.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+__all__ = ["HeartbeatMonitor", "StragglerPolicy", "Decision"]
+
+
+class Decision:
+    CONTINUE = "continue"
+    CHECKPOINT_NOW = "checkpoint_now"
+    RESTART = "restart"
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    window: int = 32            # steps in the rolling window
+    slow_factor: float = 2.0    # step slower than factor x median -> straggler
+    max_consecutive_slow: int = 5
+    heartbeat_timeout_s: float = 300.0
+
+
+class HeartbeatMonitor:
+    def __init__(self, policy: StragglerPolicy = StragglerPolicy()):
+        self.policy = policy
+        self.times: Deque[float] = deque(maxlen=policy.window)
+        self.consecutive_slow = 0
+        self.last_heartbeat = time.monotonic()
+        self.flags: List[str] = []
+
+    def record_step(self, seconds: float) -> str:
+        self.last_heartbeat = time.monotonic()
+        med = self.median()
+        self.times.append(seconds)
+        if med is not None and seconds > self.policy.slow_factor * med:
+            self.consecutive_slow += 1
+            self.flags.append(f"straggler step ({seconds:.3f}s vs median {med:.3f}s)")
+        else:
+            self.consecutive_slow = 0
+        if self.consecutive_slow >= self.policy.max_consecutive_slow:
+            # persistent slowness: snapshot so the scheduler can migrate us
+            return Decision.CHECKPOINT_NOW
+        return Decision.CONTINUE
+
+    def heartbeat_ok(self) -> bool:
+        return (time.monotonic() - self.last_heartbeat) < self.policy.heartbeat_timeout_s
+
+    def median(self) -> Optional[float]:
+        if not self.times:
+            return None
+        s = sorted(self.times)
+        return s[len(s) // 2]
+
+    def summary(self) -> Dict:
+        return {"median_step_s": self.median(),
+                "consecutive_slow": self.consecutive_slow,
+                "n_flags": len(self.flags)}

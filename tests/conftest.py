@@ -1,0 +1,18 @@
+import os
+import sys
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device; only the dry-run (and the subprocess
+# sharding tests) force placeholder devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks pkg
+
+import jax
+import pytest
+
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,62 @@
+"""Case-study reliability math (paper §VI, Figs. 4–5)."""
+import numpy as np
+import pytest
+
+from repro.core import analytics as A
+
+
+def test_p_mult_monotone_and_bounded():
+    pg = np.logspace(-12, -2, 30)
+    pm = A.p_mult_from_alpha(pg, alpha=0.5, n_gates=14000)
+    assert (np.diff(pm) >= 0).all()
+    assert (pm >= 0).all() and (pm <= 1).all()
+
+
+def test_tmr_beats_baseline_at_low_p():
+    pg = np.array([1e-10, 1e-9, 1e-8, 1e-7])
+    base = A.p_mult_from_alpha(pg, 0.5, 14000)
+    tm = A.p_mult_tmr(pg, 0.5, 14000)
+    assert (tm < base).all()
+
+
+def test_nonideal_voting_floor():
+    """Fig. 4: near p_gate=1e-9 non-ideal voting dominates TMR failures."""
+    pg = np.array([1e-9])
+    ideal = A.p_mult_tmr(pg, 0.5, 14000, ideal_voting=True)
+    nonideal = A.p_mult_tmr(pg, 0.5, 14000, ideal_voting=False)
+    assert nonideal > 10 * ideal
+
+
+def test_nn_misclassification_matches_paper_scale():
+    """Paper: baseline ~74% misclassification at p_gate = 1e-9."""
+    cs = A.AlexNetCaseStudy()
+    pm = A.p_mult_from_alpha(np.array([1e-9]), alpha=0.5, n_gates=14000)
+    fail = A.nn_misclassification(pm, cs)
+    assert 0.4 < fail[0] < 0.95
+
+
+def test_tmr_nn_error_small_at_1e9():
+    """Paper: ~2% with TMR at p_gate <= 1e-9."""
+    pm = A.p_mult_tmr(np.array([1e-9]), 0.5, 14000)
+    fail = A.nn_misclassification(pm)
+    assert fail[0] < 0.10
+
+
+def test_weight_degradation_fig5():
+    """Paper: baseline loses ~all weights by 1e7 batches at high p_input;
+    ECC holds ~O(1) corrupted weights at p_input=1e-9."""
+    T = np.array([1e7])
+    base_hi = A.weight_corruption_baseline(1e-7, T)
+    assert A.expected_corrupted_weights(base_hi)[0] > 0.9 * 62e6
+    ecc = A.weight_corruption_ecc_refined(1e-9, T, m=16)
+    n = A.expected_corrupted_weights(ecc)[0]
+    assert n < 50                        # single-digit-ish vs 17M baseline
+    base = A.weight_corruption_baseline(1e-9, T)
+    assert A.expected_corrupted_weights(base)[0] / max(n, 1e-9) > 1e5
+
+
+def test_ecc_conservative_upper_bounds_refined():
+    T = np.array([1e6, 1e7])
+    cons = A.weight_corruption_ecc(1e-9, T)
+    ref = A.weight_corruption_ecc_refined(1e-9, T)
+    assert (cons >= ref).all()

@@ -1,0 +1,43 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitops
+
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=64))
+@settings(max_examples=25, deadline=None)
+def test_bits_roundtrip(vals):
+    x = jnp.array(np.array(vals, np.uint32))
+    assert (bitops.from_bits(bitops.to_bits(x, 32)) == x).all()
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 63))
+@settings(max_examples=50, deadline=None)
+def test_rotl_matches_python(v, r):
+    got = int(bitops.rotl32(jnp.uint32(v), r))
+    want = ((v << (r % 32)) | (v >> ((32 - r) % 32))) & 0xFFFFFFFF if r % 32 else v
+    assert got == want
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=50, deadline=None)
+def test_popcount_and_bitpos(v):
+    assert int(bitops.popcount32(jnp.uint32(v))) == bin(v).count("1")
+    if bin(v).count("1") == 1:
+        assert int(bitops.bit_position(jnp.uint32(v))) == v.bit_length() - 1
+
+
+def test_rotl_inverse():
+    x = jnp.arange(16, dtype=jnp.uint32) * jnp.uint32(2654435761)
+    for r in range(32):
+        assert (bitops.rotr32(bitops.rotl32(x, r), r) == x).all()
+
+
+def test_float_view_roundtrip(key):
+    for dt in (jnp.float32, jnp.bfloat16):
+        x = jax.random.normal(key, (33,), dt)
+        v = bitops.float_view_u32(x)
+        back = bitops.u32_view_float(v, dt)
+        assert (back == x).all()

@@ -1,0 +1,72 @@
+"""Crossbar stateful-logic semantics (paper §II-A, §III-A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.crossbar import Crossbar, ErrorModel
+
+
+@pytest.fixture
+def xb():
+    rng = np.random.default_rng(0)
+    return Crossbar.from_array(rng.integers(0, 2, (16, 16)))
+
+
+def test_row_gate_all_rows_one_cycle(xb):
+    out = xb.row_gate("nor", [0, 1], 5)
+    want = ~(xb.state[:, 0] | xb.state[:, 1])
+    assert (out.state[:, 5] == want).all()
+    assert out.counter.cycles == 1
+    assert out.counter.gate_evals == 16      # row parallelism is free
+
+
+def test_col_gate_all_cols_one_cycle(xb):
+    out = xb.col_gate("min3", [0, 1, 2], 7)
+    a, b, c = xb.state[0], xb.state[1], xb.state[2]
+    want = ~((a & b) | (b & c) | (a & c))
+    assert (out.state[7, :] == want).all()
+    assert out.counter.cycles == 1
+
+
+def test_partitioned_row_gate(xb):
+    out = xb.partitioned_row_gate("nor", 4, [0, 1], 3)
+    view = xb.state.reshape(16, 4, 4)
+    want = ~(view[:, :, 0] | view[:, :, 1])
+    got = out.state.reshape(16, 4, 4)[:, :, 3]
+    assert (got == want).all()
+    assert out.counter.cycles == 1           # partitions multiply throughput
+    assert out.counter.gate_evals == 16 * 4
+
+
+def test_xor_costs_five_cycles(xb):
+    out = xb.row_gate("xor", [0, 1], 6)
+    want = xb.state[:, 0] ^ xb.state[:, 1]
+    assert (out.state[:, 6] == want).all()
+    assert out.counter.cycles == 5
+
+
+def test_direct_errors_flip_outputs():
+    rng = np.random.default_rng(1)
+    xb = Crossbar.from_array(rng.integers(0, 2, (512, 8)),
+                             errors=ErrorModel(p_gate=0.2))
+    out = xb.row_gate("nor", [0, 1], 5, key=jax.random.PRNGKey(0))
+    want = ~(xb.state[:, 0] | xb.state[:, 1])
+    frac = float((out.state[:, 5] != want).mean())
+    assert 0.1 < frac < 0.3
+
+
+def test_indirect_errors_corrupt_inputs():
+    rng = np.random.default_rng(2)
+    xb = Crossbar.from_array(rng.integers(0, 2, (4096, 4)),
+                             errors=ErrorModel(p_input=0.05))
+    out = xb.row_gate("nor", [0, 1], 3, key=jax.random.PRNGKey(1))
+    changed = float((out.state[:, :2] != xb.state[:, :2]).mean())
+    assert 0.02 < changed < 0.10
+
+
+def test_retention_drift():
+    xb = Crossbar.zeros(64, 64, errors=ErrorModel(p_retention=0.01))
+    out = xb.drift(jax.random.PRNGKey(0), dt=10.0)
+    frac = float(out.state.mean())
+    assert 0.03 < frac < 0.2                 # ~1-(0.99)^10 ~ 9.6%

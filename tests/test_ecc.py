@@ -1,0 +1,112 @@
+"""Diagonal-parity ECC properties (paper §IV)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ecc
+
+CFGS = [ecc.EccConfig(m=16, slopes=(1, -1, 2)),
+        ecc.EccConfig(m=15, slopes=(1, -1)),       # paper-faithful odd m
+        ecc.EccConfig(m=8, slopes=(1, 2))]
+
+
+def _data(seed, rows, cols):
+    return jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (rows, cols))
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: f"m{c.m}")
+def test_encode_verify_clean(cfg):
+    d = _data(0, cfg.m * 3, cfg.m * 2)
+    par = ecc.encode(d, cfg)
+    assert bool(ecc.verify(d, par, cfg))
+
+
+@given(seed=st.integers(0, 100), r=st.integers(0, 47), c=st.integers(0, 31))
+@settings(max_examples=40, deadline=None)
+def test_single_error_corrected(seed, r, c):
+    cfg = CFGS[0]
+    d = _data(seed, 48, 32)
+    par = ecc.encode(d, cfg)
+    bad = d.at[r, c].set(~d[r, c])
+    fixed, par2, stats = ecc.correct(bad, par, cfg)
+    assert (fixed == d).all()
+    assert int(stats["corrected_data"]) == 1
+    assert int(stats["uncorrectable"]) == 0
+
+
+@given(seed=st.integers(0, 100), slope_i=st.integers(0, 2),
+       bi=st.integers(0, 2), bj=st.integers(0, 1), k=st.integers(0, 15))
+@settings(max_examples=25, deadline=None)
+def test_parity_bit_error_corrected(seed, slope_i, bi, bj, k):
+    cfg = CFGS[0]
+    d = _data(seed, 48, 32)
+    par = ecc.encode(d, cfg)
+    s = cfg.slopes[slope_i]
+    bad_par = dict(par)
+    bad_par[s] = bad_par[s].at[bi, bj, k].set(~bad_par[s][bi, bj, k])
+    fixed, par2, stats = ecc.correct(d, bad_par, cfg)
+    assert (fixed == d).all()
+    assert int(stats["corrected_parity"]) == 1
+    assert all((par2[sl] == par[sl]).all() for sl in cfg.slopes)
+
+
+def test_double_error_in_block_flagged_uncorrectable():
+    cfg = CFGS[0]
+    d = _data(3, 32, 32)
+    par = ecc.encode(d, cfg)
+    bad = d.at[1, 2].set(~d[1, 2]).at[5, 9].set(~d[5, 9])  # same 16x16 block
+    _, _, stats = ecc.correct(bad, par, cfg)
+    assert int(stats["uncorrectable"]) >= 1 or int(stats["corrected_data"]) == 0
+
+
+def test_errors_in_different_blocks_all_corrected():
+    cfg = CFGS[0]
+    d = _data(4, 32, 32)
+    par = ecc.encode(d, cfg)
+    bad = d.at[1, 2].set(~d[1, 2]).at[20, 25].set(~d[20, 25])
+    fixed, _, stats = ecc.correct(bad, par, cfg)
+    assert (fixed == d).all()
+    assert int(stats["corrected_data"]) == 2
+
+
+# --- the paper's O(1) incremental-update property --------------------------
+
+@given(seed=st.integers(0, 50), col=st.integers(0, 31))
+@settings(max_examples=20, deadline=None)
+def test_incremental_column_update_matches_full_encode(seed, col):
+    """An in-row vectored op rewrites a column; parity updates in O(1)."""
+    cfg = CFGS[0]
+    d = _data(seed, 48, 32)
+    par = ecc.encode(d, cfg)
+    new_col = jax.random.bernoulli(jax.random.PRNGKey(seed + 1), 0.5, (48,))
+    inc = ecc.update_parity_col(par, d[:, col], new_col, col, cfg)
+    full = ecc.encode(d.at[:, col].set(new_col), cfg)
+    for s in cfg.slopes:
+        assert (inc[s] == full[s]).all()
+
+
+@given(seed=st.integers(0, 50), row=st.integers(0, 47))
+@settings(max_examples=20, deadline=None)
+def test_incremental_row_update_matches_full_encode(seed, row):
+    """An in-column vectored op rewrites a row — the case where horizontal
+    parity costs O(n) (Fig. 2a) and diagonal parity stays O(1)."""
+    cfg = CFGS[0]
+    d = _data(seed, 48, 32)
+    par = ecc.encode(d, cfg)
+    new_row = jax.random.bernoulli(jax.random.PRNGKey(seed + 2), 0.5, (32,))
+    inc = ecc.update_parity_row(par, d[row, :], new_row, row, cfg)
+    full = ecc.encode(d.at[row, :].set(new_row), cfg)
+    for s in cfg.slopes:
+        assert (inc[s] == full[s]).all()
+
+
+def test_overhead():
+    assert ecc.parity_overhead(CFGS[0]) == pytest.approx(3 / 16)
+    assert ecc.parity_overhead(ecc.EccConfig(m=15, slopes=(1, -1))) == pytest.approx(2 / 15)
+
+
+def test_even_m_two_slope_rejected():
+    with pytest.raises(ValueError):
+        ecc.EccConfig(m=16, slopes=(1, -1))

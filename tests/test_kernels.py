@@ -1,0 +1,84 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.multpim import multiplier_netlist
+from repro.kernels.diag_parity import encode_parity, encode_parity_ref
+from repro.kernels.tmr_vote import vote, vote_ref
+from repro.kernels.crossbar_nor import execute_netlist, execute_netlist_ref
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+
+
+# --- diag_parity -------------------------------------------------------------
+
+@pytest.mark.parametrize("n_blocks", [1, 7, 256, 1000])
+@pytest.mark.parametrize("slopes", [(1, 2, -1), (1, 2)])
+def test_diag_parity_sweep(n_blocks, slopes):
+    key = jax.random.PRNGKey(n_blocks)
+    buf = jax.random.randint(key, (n_blocks * 32,), 0, 1 << 30,
+                             jnp.int32).astype(jnp.uint32)
+    got = encode_parity(buf, slopes=slopes)
+    want = encode_parity_ref(buf, slopes=slopes)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# --- tmr_vote ----------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(5,), (33, 7), (4, 3, 17), (128, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_tmr_vote_sweep(shape, dtype):
+    key = jax.random.PRNGKey(hash(shape) % 1000)
+    if dtype == jnp.int32:
+        a = jax.random.randint(key, shape, -1000, 1000, jnp.int32)
+    else:
+        a = jax.random.normal(key, shape, dtype)
+    from repro.core.reliability import inject_bit_flips
+    bad = inject_bit_flips(a, jax.random.fold_in(key, 1), 0.02)
+    got = vote(a, bad, a)
+    want = vote_ref(a, bad, a)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    assert (np.asarray(got) == np.asarray(a)).all()
+
+
+# --- crossbar_nor (netlist interpreter) ---------------------------------------
+
+@pytest.mark.parametrize("nb,trials", [(4, 3), (4, 32), (8, 70), (8, 130)])
+def test_netlist_interpreter_sweep(nb, trials):
+    nl = multiplier_netlist(nb)
+    rng = np.random.default_rng(trials)
+    inputs = jnp.array(rng.integers(0, 2, (trials, len(nl.inputs))).astype(bool))
+    got = execute_netlist(nl, inputs)
+    want = execute_netlist_ref(nl, inputs)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# --- flash_attention -----------------------------------------------------------
+
+FLASH_CASES = [
+    dict(B=2, H=4, KV=2, S=128, hd=64, causal=True, window=0, bq=32, bk=32),
+    dict(B=1, H=8, KV=1, S=64, hd=32, causal=True, window=0, bq=16, bk=16),
+    dict(B=2, H=4, KV=4, S=64, hd=16, causal=False, window=0, bq=32, bk=32),
+    dict(B=1, H=2, KV=1, S=128, hd=32, causal=True, window=48, bq=32, bk=32),
+]
+
+
+@pytest.mark.parametrize("c", FLASH_CASES,
+                         ids=lambda c: f"S{c['S']}kv{c['KV']}w{c['window']}")
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(c, dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    qh = jax.random.normal(ks[0], (c["B"], c["H"], c["S"], c["hd"]), dtype)
+    kh = jax.random.normal(ks[1], (c["B"], c["KV"], c["S"], c["hd"]), dtype)
+    vh = jax.random.normal(ks[2], (c["B"], c["KV"], c["S"], c["hd"]), dtype)
+    got = flash_attention(qh.transpose(0, 2, 1, 3), kh.transpose(0, 2, 1, 3),
+                          vh.transpose(0, 2, 1, 3), causal=c["causal"],
+                          window=c["window"], q_block=c["bq"], kv_block=c["bk"])
+    want = flash_attention_ref(qh, kh, vh, causal=c["causal"],
+                               window=c["window"]).transpose(0, 2, 1, 3)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)

