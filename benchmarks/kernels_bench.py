@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.reliability import encode_words
+from repro.core.reliability import (ReliableStore, encode_words,
+                                    protect_leaves, scrub_leaves)
 from repro.core.tmr import vote_words
 from repro.models.attention import blocked_attention
 
@@ -49,6 +50,36 @@ def run() -> list:
     us = _time(fv, a) * 1e6
     rows.append(("kernels.tmr_vote_4MiB", us,
                  f"tpu_roofline_est={4*a.nbytes/HBM_BW*1e6:.1f}us (memory-bound)"))
+
+    # scrub engine: arena-fused single launch vs the per-leaf jnp loop on a
+    # transformer-shaped 24-leaf pytree (the pre-arena hot path).  Timed
+    # eagerly — that is how TrainLoop calls scrub between steps, and the
+    # per-leaf path's cost IS its Python/dispatch overhead.
+    keys = jax.random.split(key, 24)
+    params = {}
+    for i in range(8):
+        params[f"blk{i}.w"] = jax.random.normal(keys[3 * i], (128, 96), jnp.float32)
+        params[f"blk{i}.b"] = jax.random.normal(keys[3 * i + 1], (96,), jnp.float32)
+        params[f"blk{i}.scale"] = jax.random.normal(keys[3 * i + 2], (129,), jnp.bfloat16)
+    store = ReliableStore.protect(params)
+    n_leaves = len(jax.tree.leaves(params))
+
+    def fused_scrub():
+        fixed, rep = store.scrub()
+        return rep.corrected
+
+    ptree = protect_leaves(params)
+
+    def per_leaf_scrub():
+        _, _, rep = scrub_leaves(params, ptree)
+        return rep.corrected
+
+    us_fused = _time(fused_scrub, iters=3) * 1e6
+    us_leaf = _time(per_leaf_scrub, iters=3) * 1e6
+    rows.append((f"kernels.scrub_arena_fused_{n_leaves}leaves", us_fused,
+                 f"blocks={store.n_blocks} single fused launch"))
+    rows.append((f"kernels.scrub_per_leaf_jnp_{n_leaves}leaves", us_leaf,
+                 f"speedup_arena_fused={us_leaf / us_fused:.2f}x"))
 
     # flash attention fwd (jnp blocked path)
     B, S, H, KV, hd = 1, 1024, 8, 2, 64

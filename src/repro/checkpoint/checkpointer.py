@@ -75,21 +75,50 @@ class Checkpointer:
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump({"step": step, "n_leaves": len(leaves),
                        "time": time.time()}, f)
+        old = final + ".old"
+        if os.path.isdir(final):
+            # re-save of the same step (e.g. after an ECC-triggered restore
+            # rolled the loop back): rename over a non-empty dir fails on
+            # POSIX.  Move the published snapshot aside rather than deleting
+            # it, so a crash between the two renames still leaves a restorable
+            # snapshot (.old is invisible to all_steps) — never a window with
+            # no published data
+            if os.path.isdir(old):
+                shutil.rmtree(old)
+            os.replace(final, old)
         os.replace(tmp, final)  # atomic publish
+        shutil.rmtree(old, ignore_errors=True)
 
     def _gc(self) -> None:
         steps = self.all_steps()
         for s in steps[: -self.keep]:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
                           ignore_errors=True)
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}.old"),
+                          ignore_errors=True)
 
     # -- restore ----------------------------------------------------------------
-    def all_steps(self) -> List[int]:
-        out = []
+    def _snapshots(self) -> Dict[int, str]:
+        """step -> dir name of every restorable snapshot.  A `.old` aside
+        (left if a re-save crashed between its two renames) counts only when
+        the published dir for that step is gone — it holds the complete
+        pre-crash snapshot.  Recovery never mutates the dir; callers racing
+        an in-flight async save should wait() first (TrainLoop.restore
+        does), since _write renames the dir being re-saved."""
+        finals, olds = {}, {}
         for name in os.listdir(self.dir):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                out.append(int(name.split("_")[1]))
-        return sorted(out)
+            if not name.startswith("step_") or name.endswith(".tmp"):
+                continue
+            if name.endswith(".old"):
+                olds[int(name[:-4].split("_")[1])] = name
+            else:
+                finals[int(name.split("_")[1])] = name
+        for step, name in olds.items():
+            finals.setdefault(step, name)
+        return finals
+
+    def all_steps(self) -> List[int]:
+        return sorted(self._snapshots())
 
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
@@ -99,7 +128,10 @@ class Checkpointer:
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        path = os.path.join(self.dir, f"step_{step:08d}")
+        name = self._snapshots().get(step)
+        if name is None:
+            raise FileNotFoundError(f"no checkpoint for step {step} in {self.dir}")
+        path = os.path.join(self.dir, name)
         with open(os.path.join(path, "treedef.pkl"), "rb") as f:
             treedef = pickle.load(f)
         z = np.load(os.path.join(path, "arrays.npz"))

@@ -30,6 +30,7 @@ __all__ = [
     "AlexNetCaseStudy", "p_mult_from_alpha", "p_mult_tmr",
     "nn_misclassification", "weight_corruption_baseline",
     "weight_corruption_ecc", "expected_corrupted_weights",
+    "ScrubTrajectory", "expected_scrub_rates",
 ]
 
 
@@ -129,3 +130,74 @@ def expected_corrupted_weights(p_corrupt: np.ndarray,
                                cs: AlexNetCaseStudy = AlexNetCaseStudy()) -> np.ndarray:
     """E[# corrupted weights] (Fig. 5 y-axis)."""
     return cs.W * np.asarray(p_corrupt, dtype=np.float64)
+
+
+# --------------------------------------------------------------------------
+# scrub-engine telemetry (§IV mechanism observed live in the runtime)
+# --------------------------------------------------------------------------
+
+def expected_scrub_rates(p_bit: float, n_blocks: int,
+                         words_per_block: int = 32,
+                         bits_per_word: int = 32) -> Dict[str, float]:
+    """Per-scrub expectations for the word-level code under iid bit flips.
+
+    A 32-word block holds n = 32*32 data bits.  With per-bit flip
+    probability p per scrub interval: a block is corrected if exactly one
+    bit flipped, uncorrectable if >= 2 flipped (parity-word flips are not
+    injected by inject_bit_flips, so parity_fixed ~ 0).
+    """
+    n = words_per_block * bits_per_word
+    log_p0 = n * math.log1p(-p_bit) if p_bit < 1 else -math.inf
+    p0 = math.exp(log_p0)
+    p1 = n * p_bit * math.exp((n - 1) * math.log1p(-p_bit)) if p_bit < 1 else 0.0
+    return {
+        "corrected_per_scrub": n_blocks * p1,
+        "uncorrectable_per_scrub": n_blocks * max(0.0, 1.0 - p0 - p1),
+    }
+
+
+@dataclasses.dataclass
+class ScrubTrajectory:
+    """Accumulates ScrubReport telemetry from the runtime loop and compares
+    the observed correction stream against the closed-form model above."""
+
+    n_blocks: int = 0
+    steps: list = dataclasses.field(default_factory=list)
+    corrected: list = dataclasses.field(default_factory=list)
+    parity_fixed: list = dataclasses.field(default_factory=list)
+    uncorrectable: list = dataclasses.field(default_factory=list)
+
+    def add(self, step: int, corrected: int, parity_fixed: int,
+            uncorrectable: int) -> None:
+        self.steps.append(int(step))
+        self.corrected.append(int(corrected))
+        self.parity_fixed.append(int(parity_fixed))
+        self.uncorrectable.append(int(uncorrectable))
+
+    @property
+    def n_scrubs(self) -> int:
+        return len(self.steps)
+
+    def totals(self) -> Dict[str, int]:
+        return {"corrected": sum(self.corrected),
+                "parity_fixed": sum(self.parity_fixed),
+                "uncorrectable": sum(self.uncorrectable)}
+
+    def observed_flip_rate(self) -> float:
+        """MLE of the per-bit flip rate from the correction stream (valid in
+        the sparse regime where nearly all flips are single-bit/block)."""
+        if not self.n_scrubs or not self.n_blocks:
+            return 0.0
+        bits_scanned = self.n_scrubs * self.n_blocks * 32 * 32
+        flips = sum(self.corrected) + 2 * sum(self.uncorrectable)
+        return flips / bits_scanned
+
+    def summary(self, p_bit: float = 0.0) -> Dict[str, float]:
+        out: Dict[str, float] = dict(self.totals())
+        out["n_scrubs"] = self.n_scrubs
+        out["observed_flip_rate"] = self.observed_flip_rate()
+        if p_bit > 0 and self.n_blocks:
+            exp = expected_scrub_rates(p_bit, self.n_blocks)
+            out["expected_corrected_per_scrub"] = exp["corrected_per_scrub"]
+            out["expected_uncorrectable_per_scrub"] = exp["uncorrectable_per_scrub"]
+        return out

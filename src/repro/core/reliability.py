@@ -17,27 +17,33 @@ Families: slopes (1, 2, -1): (1,2) locate a single flipped bit per block
 (gcd(2-1,32)=1); (-1) is the paper's counter-diagonal, kept as an integrity
 check (see DESIGN.md §8).  Storage overhead = 3/32 ~ 9.4%.
 
-`ReliableStore` wraps a parameter pytree: encode once, `scrub()` between
-training steps verifies and corrects bit flips (SDC defense), and reports
-uncorrectable blocks so the runtime can trigger a checkpoint restore —
-connecting the paper's mechanism to large-scale fault tolerance.
+`ReliableStore` wraps a parameter pytree.  The pytree is flattened into the
+packed arena of core/arena.py — one contiguous uint32 buffer with every leaf
+block-aligned — so protect, scrub and refresh are each ONE fused Pallas
+launch over the whole model (DESIGN.md §9) instead of a per-leaf Python
+loop.  `scrub()` verifies and corrects bit flips between training steps (SDC
+defense) and reports uncorrectable blocks so the runtime can trigger a
+checkpoint restore — connecting the paper's mechanism to large-scale fault
+tolerance.  The pure-jnp word functions (`encode_words`, `correct_words`)
+are retained both as the kernels' bit-exact oracle and as the
+`backend="jnp"` fallback.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from . import arena
 from .bitops import bit_position, popcount32, rotl32
-from .tmr import vote_array
 
 __all__ = ["WordEccConfig", "encode_words", "syndrome_words", "correct_words",
-           "ReliableStore", "ScrubReport", "inject_bit_flips", "tmr_serve"]
+           "ReliableStore", "ScrubReport", "inject_bit_flips", "tmr_serve",
+           "protect_leaves", "scrub_leaves"]
 
-BLOCK = 32  # words per block == bits per word
+BLOCK = arena.BLOCK  # words per block == bits per word
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,108 +131,130 @@ def correct_words(words: jax.Array, parity: jax.Array,
 
 
 # --------------------------------------------------------------------------
-# parameter-store integration
+# parameter-store integration (arena-backed)
 # --------------------------------------------------------------------------
-
-def _leaf_to_words(x: jax.Array) -> Tuple[jax.Array, int]:
-    """View any leaf as a zero-padded flat uint32 buffer (pad length in words)."""
-    if x.dtype == jnp.bfloat16:
-        # pack pairs of u16 halves into u32 words (pad to even length)
-        u16 = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint16)
-        if u16.shape[0] % 2:
-            u16 = jnp.pad(u16, (0, 1))
-        flat = u16[0::2].astype(jnp.uint32) | (u16[1::2].astype(jnp.uint32) << 16)
-    elif x.dtype == jnp.float32:
-        flat = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint32)
-    elif x.dtype in (jnp.int32, jnp.uint32):
-        flat = x.reshape(-1).astype(jnp.uint32)
-    else:
-        raise TypeError(f"ReliableStore: unsupported dtype {x.dtype}")
-    pad = (-flat.shape[0]) % BLOCK
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    return flat, pad
-
-
-def _words_to_leaf(words: jax.Array, like: jax.Array, pad: int) -> jax.Array:
-    if pad:
-        words = words[:-pad] if like.dtype != jnp.bfloat16 else words
-    if like.dtype == jnp.bfloat16:
-        u16 = jnp.stack([(words & 0xFFFF).astype(jnp.uint16),
-                         (words >> 16).astype(jnp.uint16)], -1).reshape(-1)
-        n = int(np_prod(like.shape))
-        u16 = u16[:n]
-        return jax.lax.bitcast_convert_type(u16, jnp.bfloat16).reshape(like.shape)
-    if like.dtype == jnp.float32:
-        return jax.lax.bitcast_convert_type(words, jnp.float32).reshape(like.shape)
-    return words.astype(like.dtype).reshape(like.shape)
-
-
-def np_prod(shape) -> int:
-    out = 1
-    for s in shape:
-        out *= int(s)
-    return out
-
 
 @jax.tree_util.register_pytree_node_class
 class ReliableStore:
     """ECC-protected parameter pytree (the paper's §IV at datacenter scale).
 
-    params are stored as-is (zero-copy for the forward pass); check words are
-    held alongside.  `scrub()` re-derives syndromes and corrects single-bit
-    flips per 32-word block, returning a ScrubReport.  Call `refresh(params)`
-    after an optimizer step rewrites the weights (the "function output ECC
-    update" of §IV — here whole buffers change, so re-encode; incremental
-    column/row updates are exercised in core/ecc.py and the Pallas kernel).
+    params are stored as-is (zero-copy for the forward pass); the parity
+    table of the *packed arena* — one (n_blocks, n_families) uint32 array
+    covering every leaf — is held alongside.  `scrub()` packs the pytree,
+    runs the fused encode->syndrome->locate->correct Pallas kernel in a
+    single launch, and unpacks the corrected arena, returning a ScrubReport.
+    Call `refresh(params)` after an optimizer step rewrites the weights (the
+    "function output ECC update" of §IV — whole buffers change, so re-encode
+    with the one-launch encode kernel; incremental column/row updates are
+    exercised in core/ecc.py).
+
+    backend="kernel" (default) dispatches the Pallas kernels;
+    backend="jnp" runs the pure-jnp oracle on the same arena (bit-exact,
+    used for verification and on hosts without Pallas support).
     """
 
-    def __init__(self, params: Any, parity: Any, cfg: WordEccConfig = WordEccConfig()):
+    def __init__(self, params: Any, parity: jax.Array,
+                 cfg: WordEccConfig = WordEccConfig(),
+                 backend: str = "kernel"):
+        assert backend in ("kernel", "jnp"), backend
         self.params = params
         self.parity = parity
         self.cfg = cfg
+        self.backend = backend
+        # best-effort cache of (packed arena, spec) for params as stored.
+        # protect/scrub fill it, so a scrub right after a refresh (the loop's
+        # steady state) does not pack the same pytree twice.  Dropped by
+        # tree_flatten — stores crossing a jit boundary just repack.
+        self._packed: Optional[Tuple[jax.Array, arena.ArenaSpec]] = None
 
     @staticmethod
-    def protect(params: Any, cfg: WordEccConfig = WordEccConfig()) -> "ReliableStore":
-        def enc(x):
-            words, _ = _leaf_to_words(x)
-            return encode_words(words, cfg)
-        return ReliableStore(params, jax.tree.map(enc, params), cfg)
+    def protect(params: Any, cfg: WordEccConfig = WordEccConfig(),
+                backend: str = "kernel") -> "ReliableStore":
+        packed = arena.pack(params)
+        buf = packed[0]
+        if backend == "kernel" and buf.shape[0]:
+            from ..kernels.diag_parity import encode_parity
+            parity = encode_parity(buf, slopes=cfg.slopes)
+        else:
+            parity = encode_words(buf, cfg)
+        store = ReliableStore(params, parity, cfg, backend)
+        store._packed = packed
+        return store
 
     def refresh(self, new_params: Any) -> "ReliableStore":
-        return ReliableStore.protect(new_params, self.cfg)
+        return ReliableStore.protect(new_params, self.cfg, self.backend)
 
     def scrub(self) -> Tuple["ReliableStore", ScrubReport]:
-        cfg = self.cfg
+        buf, spec = self._packed if self._packed is not None \
+            else arena.pack(self.params)
+        if self.backend == "kernel" and buf.shape[0]:
+            from ..kernels.diag_parity import scrub as scrub_op
+            fixed, par2, counts = scrub_op(buf, self.parity,
+                                           slopes=self.cfg.slopes)
+            report = ScrubReport(corrected=counts[0], parity_fixed=counts[1],
+                                 uncorrectable=counts[2])
+        else:
+            fixed, par2, report = correct_words(buf, self.parity, self.cfg)
+        out = ReliableStore(arena.unpack(fixed, spec), par2, self.cfg,
+                            self.backend)
+        out._packed = (fixed, spec)
+        return out, report
 
-        def fix(x, par):
-            words, pad = _leaf_to_words(x)
-            fixed, par2, rep = correct_words(words, par, cfg)
-            return _words_to_leaf(fixed, x, pad), par2, rep
-
-        leaves, treedef = jax.tree.flatten(self.params)
-        pleaves = treedef.flatten_up_to(self.parity)
-        out_p, out_c, reps = [], [], []
-        for x, par in zip(leaves, pleaves):
-            xf, pf, rep = fix(x, par)
-            out_p.append(xf)
-            out_c.append(pf)
-            reps.append(rep)
-        total = ScrubReport(
-            corrected=sum(r.corrected for r in reps),
-            parity_fixed=sum(r.parity_fixed for r in reps),
-            uncorrectable=sum(r.uncorrectable for r in reps),
-        )
-        return ReliableStore(treedef.unflatten(out_p), treedef.unflatten(out_c),
-                             cfg), total
+    @property
+    def n_blocks(self) -> int:
+        return int(self.parity.shape[0])
 
     # pytree plumbing
     def tree_flatten(self):
-        return (self.params, self.parity), self.cfg
+        return (self.params, self.parity), (self.cfg, self.backend)
 
     @classmethod
-    def tree_unflatten(cls, cfg, children):
-        return cls(children[0], children[1], cfg)
+    def tree_unflatten(cls, aux, children):
+        cfg, backend = aux
+        return cls(children[0], children[1], cfg, backend)
+
+
+# --------------------------------------------------------------------------
+# legacy per-leaf path — N dispatches, one per pytree leaf.  Kept only as
+# the baseline that benchmarks/kernels_bench.py measures the arena against.
+# --------------------------------------------------------------------------
+
+def _leaf_spec(x: jax.Array, n_words: int) -> arena.LeafSpec:
+    return arena.LeafSpec(offset=0, n_words=n_words, pad_words=0,
+                          dtype=x.dtype, shape=tuple(x.shape))
+
+
+def _pad_leaf_words(x: jax.Array) -> jax.Array:
+    words = arena.leaf_to_words(x)
+    pad = (-words.shape[0]) % BLOCK
+    return jnp.pad(words, (0, pad)) if pad else words
+
+
+def protect_leaves(params: Any, cfg: WordEccConfig = WordEccConfig()) -> Any:
+    """Per-leaf parity tree (the pre-arena layout): one encode per leaf."""
+    return jax.tree.map(lambda x: encode_words(_pad_leaf_words(x), cfg), params)
+
+
+def scrub_leaves(params: Any, parity_tree: Any,
+                 cfg: WordEccConfig = WordEccConfig()):
+    """Per-leaf jnp scrub loop (the pre-arena hot path): one dispatch per
+    leaf plus a Python-level reduction of the reports."""
+    leaves, treedef = jax.tree.flatten(params)
+    pleaves = treedef.flatten_up_to(parity_tree)
+    out_p, out_c, reps = [], [], []
+    for x, par in zip(leaves, pleaves):
+        words = _pad_leaf_words(x)
+        fixed, par2, rep = correct_words(words, par, cfg)
+        n_words = arena._words_per_leaf(x)
+        out_p.append(arena.words_to_leaf(fixed[:n_words], _leaf_spec(x, n_words)))
+        out_c.append(par2)
+        reps.append(rep)
+    total = ScrubReport(
+        corrected=sum(r.corrected for r in reps),
+        parity_fixed=sum(r.parity_fixed for r in reps),
+        uncorrectable=sum(r.uncorrectable for r in reps),
+    )
+    return treedef.unflatten(out_p), treedef.unflatten(out_c), total
 
 
 def inject_bit_flips(params: Any, key: jax.Array, p_bit: float) -> Any:
@@ -235,33 +263,40 @@ def inject_bit_flips(params: Any, key: jax.Array, p_bit: float) -> Any:
     keys = jax.random.split(key, len(leaves))
     out = []
     for x, k in zip(leaves, keys):
-        words, pad = _leaf_to_words(x)
-        nbits = words.shape[0] * 32
-        flips = jax.random.bernoulli(k, p_bit, (words.shape[0], 32))
-        mask = (flips.astype(jnp.uint32) << jnp.arange(32, dtype=jnp.uint32)[None, :]).sum(
+        words = arena.leaf_to_words(x)
+        flips = jax.random.bernoulli(k, p_bit, (words.shape[0], BLOCK))
+        mask = (flips.astype(jnp.uint32) << jnp.arange(BLOCK, dtype=jnp.uint32)[None, :]).sum(
             axis=1, dtype=jnp.uint32)
-        out.append(_words_to_leaf(words ^ mask, x, pad))
+        out.append(arena.words_to_leaf(words ^ mask,
+                                       _leaf_spec(x, words.shape[0])))
     return treedef.unflatten(out)
 
 
-def tmr_serve(serve_fn, mode: str = "serial"):
+def tmr_serve(serve_fn, mode: str = "serial", use_kernel: bool = True):
     """TMR-voted serving (paper §V on TPU): run the model 3x, vote per-bit.
 
     serve_fn(params, *inputs) -> pytree of arrays.  The three copies receive
     independently *scrubbed/corrupted* params via an optional corruptor in
     tests; in production the copies run on disjoint replica groups (parallel
-    mode shards the leading replica axis over the mesh).
+    mode shards the leading replica axis over the mesh).  Voting goes
+    through the Pallas tmr_vote kernel by default (one fused memory-bound
+    pass per output leaf); use_kernel=False falls back to the jnp voter.
     """
+    if use_kernel:
+        from ..kernels.tmr_vote import vote as _vote
+    else:
+        from .tmr import vote_array as _vote
+
     def serial(p1, p2, p3, *inputs):
         o1 = serve_fn(p1, *inputs)
         o2 = serve_fn(p2, *inputs)
         o3 = serve_fn(p3, *inputs)
-        return jax.tree.map(vote_array, o1, o2, o3)
+        return jax.tree.map(_vote, o1, o2, o3)
 
     def parallel(p1, p2, p3, *inputs):
         stacked = jax.tree.map(lambda a, b, c: jnp.stack([a, b, c]), p1, p2, p3)
         outs = jax.vmap(lambda p: serve_fn(p, *inputs))(stacked)
         o1, o2, o3 = (jax.tree.map(lambda x, i=i: x[i], outs) for i in range(3))
-        return jax.tree.map(vote_array, o1, o2, o3)
+        return jax.tree.map(_vote, o1, o2, o3)
 
     return serial if mode == "serial" else parallel

@@ -1,10 +1,16 @@
-"""Diagonal-parity encode kernel (paper §IV on TPU words).
+"""Diagonal-parity kernels (paper §IV on TPU words).
 
 A block is 32 consecutive uint32 words; the slope-s parity word is
 XOR_i rotl32(w_i, s*i) — the 32-bit rotate IS the paper's barrel shifter.
-The kernel tiles (n_blocks, 32) into VMEM with `bm` blocks per grid step and
-unrolls the 32-word XOR tree; rotation amounts are compile-time constants so
-each step is two shifts and an or on the VPU.
+Both kernels tile (n_blocks, 32) into VMEM with `bm` blocks per grid step
+and unroll the 32-word XOR tree; rotation amounts are compile-time constants
+so each step is two shifts and an or on the VPU.
+
+`encode_parity_kernel` is the protect/refresh hot loop.  `scrub_kernel`
+fuses the whole scrub pass — encode → syndrome → locate → correct for both
+data and parity-word errors — into one launch over the packed arena
+(DESIGN.md §9), emitting corrected words, corrected parity and per-tile
+(corrected, parity_fixed, uncorrectable) counters.
 """
 from __future__ import annotations
 
@@ -14,6 +20,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ...core.bitops import popcount32
 
 BLOCK = 32
 
@@ -51,3 +59,86 @@ def encode_parity_kernel(words: jax.Array, slopes: Tuple[int, ...] = (1, 2, -1),
         out_shape=jax.ShapeDtypeStruct((n_blocks, len(slopes)), jnp.uint32),
         interpret=interpret,
     )(words)
+
+
+def _onehot_position(x: jax.Array) -> jax.Array:
+    """Bit index of a one-hot uint32: popcount(x - 1).  Gated by callers on
+    popcount(x) == 1, so the x == 0 wrap is never observed."""
+    return popcount32(x - jnp.uint32(1))
+
+
+def _scrub_kernel(words_ref, parity_ref, out_w_ref, out_p_ref, stats_ref,
+                  *, slopes: Tuple[int, ...]):
+    w = words_ref[...]                      # (bm, 32) uint32
+    p = parity_ref[...]                     # (bm, F) uint32
+
+    # encode + syndrome, one fused XOR tree per family
+    syn = []
+    for f, s in enumerate(slopes):
+        acc = w[:, 0]
+        for i in range(1, BLOCK):
+            acc = acc ^ _rotl(w[:, i], (s * i) % BLOCK)
+        syn.append(acc ^ p[:, f])
+    syn = jnp.stack(syn, axis=-1)           # (bm, F)
+
+    # classify: per-family popcount / one-hot position
+    pop = popcount32(syn)                   # (bm, F) int32
+    nonzero = pop > 0
+    onehot = pop == 1
+    n_nonzero = nonzero.astype(jnp.int32).sum(axis=-1)
+    hot = _onehot_position(syn)             # (bm, F); valid where onehot
+
+    # locate: slopes (1, 2) invert the diagonal system; the rest must agree
+    ia, ib = slopes.index(1), slopes.index(2)
+    i0 = (hot[:, ib] - hot[:, ia]) & (BLOCK - 1)
+    j0 = (hot[:, ia] - i0) & (BLOCK - 1)
+    consistent = jnp.ones(w.shape[:1], dtype=jnp.bool_)
+    for f, s in enumerate(slopes):
+        consistent &= hot[:, f] == ((j0 + s * i0) & (BLOCK - 1))
+
+    data_err = (n_nonzero == len(slopes)) & onehot.all(-1) & consistent
+    parity_err = (n_nonzero == 1) & (onehot | ~nonzero).all(-1)
+    uncorrectable = (n_nonzero > 0) & ~data_err & ~parity_err
+
+    # correct: flip bit j0 of word i0 in flagged blocks; heal parity words
+    flip_word = jnp.where(data_err, jnp.uint32(1) << j0.astype(jnp.uint32),
+                          jnp.uint32(0))
+    row = jax.lax.broadcasted_iota(jnp.int32, w.shape, 1) == i0[:, None]
+    out_w_ref[...] = w ^ (row.astype(jnp.uint32) * flip_word[:, None])
+    out_p_ref[...] = p ^ jnp.where(parity_err[:, None] & nonzero, syn,
+                                   jnp.uint32(0))
+    stats_ref[...] = jnp.stack([
+        data_err.astype(jnp.int32).sum(),
+        parity_err.astype(jnp.int32).sum(),
+        uncorrectable.astype(jnp.int32).sum(),
+    ]).reshape(1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("slopes", "block_m", "interpret"))
+def scrub_kernel(words: jax.Array, parity: jax.Array,
+                 slopes: Tuple[int, ...] = (1, 2, -1),
+                 block_m: int = 256, interpret: bool = True):
+    """Fused scrub: words (n_blocks, 32) + parity (n_blocks, F) uint32 ->
+    (corrected words, corrected parity, per-tile stats (grid, 3) int32).
+
+    stats columns: corrected, parity_fixed, uncorrectable.  Requires slopes
+    to contain the locating pair (1, 2).
+    """
+    assert 1 in slopes and 2 in slopes, slopes
+    n_blocks, F = words.shape[0], len(slopes)
+    bm = min(block_m, n_blocks)
+    assert n_blocks % bm == 0, (n_blocks, bm)
+    grid = n_blocks // bm
+    return pl.pallas_call(
+        functools.partial(_scrub_kernel, slopes=slopes),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((bm, BLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((bm, F), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bm, BLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, F), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 3), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.uint32),
+                   jax.ShapeDtypeStruct((n_blocks, F), jnp.uint32),
+                   jax.ShapeDtypeStruct((grid, 3), jnp.int32)],
+        interpret=interpret,
+    )(words, parity)

@@ -1,4 +1,11 @@
-"""Public ECC-encode op: pads, tiles and dispatches the Pallas kernel."""
+"""Public ECC ops: pad, tile and dispatch the Pallas kernels.
+
+`encode_parity` is the protect/refresh path; `scrub` is the fused
+encode->syndrome->locate->correct pass.  Both take a flat uint32 buffer
+(the packed arena of core/arena.py) so the whole parameter pytree is one
+launch.  Padding blocks are zero words with zero parity — their syndrome
+is identically clean, so they never contribute to the stats.
+"""
 from __future__ import annotations
 
 from typing import Tuple
@@ -7,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import use_interpret
-from .kernel import BLOCK, encode_parity_kernel
+from .kernel import BLOCK, encode_parity_kernel, scrub_kernel
 
 
 def encode_parity(buf: jax.Array, slopes: Tuple[int, ...] = (1, 2, -1),
@@ -17,10 +24,37 @@ def encode_parity(buf: jax.Array, slopes: Tuple[int, ...] = (1, 2, -1),
     assert buf.ndim == 1 and buf.shape[0] % BLOCK == 0
     words = buf.reshape(-1, BLOCK)
     n = words.shape[0]
-    bm = block_m
-    pad = (-n) % bm
+    if n == 0:
+        return jnp.zeros((0, len(slopes)), jnp.uint32)
+    bm = min(block_m, n)
+    pad = (-n) % bm if n > bm else 0
     if pad:
         words = jnp.pad(words, ((0, pad), (0, 0)))
     out = encode_parity_kernel(words, slopes=tuple(slopes), block_m=bm,
                                interpret=use_interpret() if interpret is None else interpret)
     return out[:n]
+
+
+def scrub(buf: jax.Array, parity: jax.Array,
+          slopes: Tuple[int, ...] = (1, 2, -1), block_m: int = 256,
+          interpret: bool | None = None):
+    """Fused scrub of a flat uint32 buffer against its parity table.
+
+    buf: (n_blocks * 32,) uint32; parity: (n_blocks, len(slopes)) uint32.
+    Returns (corrected buf, corrected parity, counts) with counts a (3,)
+    int32 vector: corrected, parity_fixed, uncorrectable.
+    """
+    assert buf.ndim == 1 and buf.shape[0] % BLOCK == 0
+    words = buf.reshape(-1, BLOCK)
+    n = words.shape[0]
+    assert parity.shape == (n, len(slopes)), (parity.shape, n)
+    if n == 0:
+        return buf, parity, jnp.zeros((3,), jnp.int32)
+    pad = (-n) % block_m if n > block_m else 0
+    if pad:
+        words = jnp.pad(words, ((0, pad), (0, 0)))
+        parity = jnp.pad(parity, ((0, pad), (0, 0)))
+    fixed, par2, stats = scrub_kernel(
+        words, parity, slopes=tuple(slopes), block_m=block_m,
+        interpret=use_interpret() if interpret is None else interpret)
+    return fixed[:n].reshape(-1), par2[:n], stats.sum(axis=0)

@@ -1,13 +1,26 @@
-"""Pure-jnp oracle: the reliability-layer encoder."""
+"""Pure-jnp oracles: the reliability-layer encoder and scrubber."""
 from __future__ import annotations
 
 from typing import Tuple
 
 import jax
+import jax.numpy as jnp
 
-from ...core.reliability import WordEccConfig, encode_words
+from ...core.reliability import WordEccConfig, correct_words, encode_words
 
 
 def encode_parity_ref(words: jax.Array,
                       slopes: Tuple[int, ...] = (1, 2, -1)) -> jax.Array:
     return encode_words(words.reshape(-1), WordEccConfig(slopes=slopes))
+
+
+def scrub_ref(buf: jax.Array, parity: jax.Array,
+              slopes: Tuple[int, ...] = (1, 2, -1)):
+    """Oracle for the fused scrub kernel, built on correct_words.
+
+    Same contract as ops.scrub: (buf', parity', counts (3,) int32).
+    """
+    cfg = WordEccConfig(slopes=slopes)
+    fixed, par2, rep = correct_words(buf.reshape(-1), parity, cfg)
+    counts = jnp.stack([rep.corrected, rep.parity_fixed, rep.uncorrectable])
+    return fixed, par2, counts

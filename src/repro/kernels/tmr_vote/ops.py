@@ -19,13 +19,17 @@ def vote(a: jax.Array, b: jax.Array, c: jax.Array,
     av, bv, cv = (float_view_u32(x).reshape(-1) for x in (a, b, c))
     n = av.shape[0]
     pad = (-n) % _LANES
+    bm = min(256, max(1, (n + pad) // _LANES))
+    # pad the row axis to a multiple of the block too (row counts above 256
+    # are not otherwise guaranteed divisible by it)
+    pad += (-((n + pad) // _LANES)) % bm * _LANES
     if pad:
         av, bv, cv = (jnp.pad(x, (0, pad)) for x in (av, bv, cv))
     m = av.shape[0] // _LANES
     out = vote_kernel(av.reshape(m, _LANES).astype(jnp.uint32),
                       bv.reshape(m, _LANES).astype(jnp.uint32),
                       cv.reshape(m, _LANES).astype(jnp.uint32),
-                      block_m=min(256, m), block_n=_LANES,
+                      block_m=bm, block_n=_LANES,
                       interpret=use_interpret() if interpret is None else interpret)
     flat = out.reshape(-1)[:n]
     if dtype == jnp.bfloat16:

@@ -15,7 +15,7 @@ import numpy as np
 
 from ..configs import get_config, list_archs
 from ..core.reliability import inject_bit_flips
-from ..core.tmr import vote_array
+from ..kernels.tmr_vote import vote
 from ..models import params as P
 from ..models import transformer as T
 from ..models.steps import make_decode_step, make_prefill_step
@@ -66,8 +66,9 @@ def main() -> None:
         out = run_copy(params)
     else:
         # three copies with independently injected storage corruption; per-bit
-        # majority voting on the generated token ids (serial: sequential;
-        # parallel: 3 replica groups on a real mesh — same result here)
+        # majority voting on the generated token ids through the Pallas
+        # tmr_vote kernel (serial: sequential; parallel: 3 replica groups on
+        # a real mesh — same result here)
         copies = []
         for i in range(3):
             p = params
@@ -75,7 +76,7 @@ def main() -> None:
                 p = inject_bit_flips(params, jax.random.fold_in(key, 100 + i),
                                      args.inject_p_bit)
             copies.append(run_copy(p))
-        out = vote_array(*copies)
+        out = vote(*copies)
     dt = time.time() - t0
 
     ref = run_copy(params) if (args.tmr != "off" and args.inject_p_bit) else out

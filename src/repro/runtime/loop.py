@@ -2,8 +2,16 @@
 
 Composes the substrates: data prefetch, jit'd train step, periodic
 checkpointing, heartbeat/straggler monitoring, and the paper's reliability
-layer — ECC scrubbing of the parameter store between steps and injected
-soft errors for validation.  `run()` survives (simulated) preemptions by
+layer — the arena-backed scrub engine (core/reliability.py) verifying the
+parameter store between steps and injected soft errors for validation.
+
+Scrub scheduling is interval-based: parity is refreshed after every
+parameter write (one fused encode launch over the packed arena) and every
+`scrub_every` steps the fused scrub kernel verifies/corrects the store.
+Each ScrubReport feeds two consumers: the HeartbeatMonitor (an
+uncorrectable block returns Decision.RESTART, which triggers a checkpoint
+restore) and a core.analytics.ScrubTrajectory (observed correction stream
+vs the closed-form model).  `run()` survives (simulated) preemptions by
 restoring the latest checkpoint and replaying the data stream from the step
 counter (the synthetic pipeline is deterministic in step).
 """
@@ -17,7 +25,8 @@ import jax
 import numpy as np
 
 from ..checkpoint import Checkpointer
-from ..core.reliability import ReliableStore, inject_bit_flips
+from ..core.analytics import ScrubTrajectory
+from ..core.reliability import ReliableStore, WordEccConfig, inject_bit_flips
 from .monitor import Decision, HeartbeatMonitor, StragglerPolicy
 
 __all__ = ["LoopConfig", "TrainLoop"]
@@ -31,13 +40,17 @@ class LoopConfig:
     log_every: int = 10
     inject_p_bit: float = 0.0     # simulated indirect soft-error rate per scrub interval
     inject_seed: int = 0
+    ecc_backend: str = "kernel"   # "kernel" (fused Pallas scrub) or "jnp"
+    max_scrub_restores: int = 3   # consecutive ECC restores before giving up
+                                  # and continuing with best-effort correction
 
 
 class TrainLoop:
     def __init__(self, train_step: Callable, state: Any, batch_at: Callable[[int], Any],
                  cfg: LoopConfig, ckpt: Optional[Checkpointer] = None,
                  monitor: Optional[HeartbeatMonitor] = None,
-                 log: Callable[[str], None] = print):
+                 log: Callable[[str], None] = print,
+                 inject_fn: Optional[Callable[[Any, int], Any]] = None):
         self.train_step = train_step
         self.state = state
         self.batch_at = batch_at
@@ -46,52 +59,126 @@ class TrainLoop:
         self.monitor = monitor or HeartbeatMonitor()
         self.log = log
         self.step = 0
-        self.parity = None            # ECC check words (outside the jit state)
+        self.store: Optional[ReliableStore] = None   # ECC store (params + arena parity)
+        self.inject_fn = inject_fn    # deterministic corruptor hook (tests)
         self.metrics_history: list = []
         self.scrub_reports: list = []
+        self.scrub_trajectory = ScrubTrajectory()
+        self.total_restores = 0
+        self._consecutive_scrub_restores = 0
 
     # -- reliability hooks -----------------------------------------------------
     # Protocol (paper §IV adapted): parity is refreshed after every parameter
     # write (the optimizer step == the mMPU "function output"); scrubbing
-    # verifies/corrects accumulated storage flips between refreshes.
+    # verifies/corrects accumulated storage flips between refreshes.  Both
+    # are single fused launches over the packed arena.
+    @property
+    def parity(self):
+        return self.store.parity if self.store is not None else None
+
     def attach_ecc(self) -> None:
-        self.parity = ReliableStore.protect(self.state["params"]).parity
+        self.store = ReliableStore.protect(self.state["params"],
+                                           backend=self.cfg.ecc_backend)
+        self.scrub_trajectory.n_blocks = self.store.n_blocks
 
     def _refresh_parity(self) -> None:
-        if self.parity is not None:
-            self.parity = ReliableStore.protect(self.state["params"]).parity
+        if self.store is not None:
+            self.store = self.store.refresh(self.state["params"])
 
-    def _scrub(self) -> None:
-        params = self.state["params"]
+    def _corrupt(self, params: Any) -> Any:
+        if self.inject_fn is not None:
+            return self.inject_fn(params, self.step)
         if self.cfg.inject_p_bit > 0:
-            key = jax.random.PRNGKey(self.cfg.inject_seed + self.step)
-            params = inject_bit_flips(params, key, self.cfg.inject_p_bit)
-        fixed, report = ReliableStore(params, self.parity).scrub()
+            # fold the restore count in: real soft errors do not replay, so a
+            # post-restore replay of this step must draw fresh flips (else an
+            # uncorrectable draw would recur identically and livelock the run)
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(self.cfg.inject_seed + self.step),
+                self.total_restores)
+            return inject_bit_flips(params, key, self.cfg.inject_p_bit)
+        return params
+
+    def _scrub(self) -> bool:
+        """One fused scrub pass; returns True if a restore rolled back the
+        step counter (the caller must not finish the current iteration)."""
+        params = self.state["params"]
+        corrupted = self._corrupt(params)
+        if corrupted is params:
+            # no injection: scrub the just-refreshed store, reusing its
+            # cached packed arena instead of packing the pytree again
+            store = self.store
+        else:
+            store = ReliableStore(corrupted, self.store.parity,
+                                  self.store.cfg, self.store.backend)
+        fixed, report = store.scrub()
         self.scrub_reports.append((self.step, report))
-        if int(report.uncorrectable) > 0 and self.ckpt is not None \
+        self.scrub_trajectory.add(self.step, int(report.corrected),
+                                  int(report.parity_fixed),
+                                  int(report.uncorrectable))
+        decision = self.monitor.record_scrub(int(report.corrected),
+                                             int(report.parity_fixed),
+                                             int(report.uncorrectable))
+        if decision == Decision.RESTART and self.ckpt is not None \
                 and self.ckpt.latest_step() is not None:
-            self.log(f"[reliability] step {self.step}: "
-                     f"{int(report.uncorrectable)} uncorrectable blocks -> restore")
-            self.restore()
-            return
+            if self._consecutive_scrub_restores < self.cfg.max_scrub_restores:
+                self._consecutive_scrub_restores += 1
+                self.log(f"[reliability] step {self.step}: "
+                         f"{int(report.uncorrectable)} uncorrectable blocks -> restore")
+                return self.restore()
+            # the same replay window keeps producing uncorrectable blocks:
+            # restoring again cannot help, so accept the best-effort
+            # correction and keep training rather than livelock
+            self.log(f"[reliability] step {self.step}: restore limit "
+                     f"({self.cfg.max_scrub_restores}) reached; continuing "
+                     f"with best-effort corrected params")
+        else:
+            self._consecutive_scrub_restores = 0
         self.state = dict(self.state, params=fixed.params)
-        self.parity = fixed.parity
+        self.store = fixed
+        return False
 
     # -- checkpoint/restore ------------------------------------------------------
     def save(self) -> None:
         if self.ckpt is not None:
             snap = {"state": self.state, "step": self.step}
-            if self.parity is not None:
-                snap["parity"] = self.parity
+            if self.store is not None:
+                snap["parity"] = self.store.parity
             self.ckpt.save(self.step, snap)
 
     def restore(self) -> bool:
-        if self.ckpt is None or self.ckpt.latest_step() is None:
+        if self.ckpt is None:
+            return False
+        # an async re-save may be mid-rename on the dir we are about to
+        # read; drain it before resolving snapshots
+        self.ckpt.wait()
+        if self.ckpt.latest_step() is None:
             return False
         snap = self.ckpt.restore()
         self.state = jax.tree.map(jax.numpy.asarray, snap["state"])
+        self.total_restores += 1
         if "parity" in snap:
-            self.parity = jax.tree.map(jax.numpy.asarray, snap["parity"])
+            # a parity table in the snapshot means the saving run had ECC
+            # attached — re-arm it even in a fresh process (store is None),
+            # or scrubbing would silently stop across preemption restarts.
+            # A legacy per-leaf parity pytree (pre-arena checkpoints) is not
+            # usable as the (n_blocks, F) table: re-encode from params.
+            parity = snap["parity"]
+            if self.store is not None:
+                cfg, backend = self.store.cfg, self.store.backend
+            else:
+                cfg, backend = WordEccConfig(), self.cfg.ecc_backend
+            if hasattr(parity, "shape") and getattr(parity, "ndim", 0) == 2:
+                self.store = ReliableStore(self.state["params"],
+                                           jax.numpy.asarray(parity),
+                                           cfg, backend)
+            else:
+                self.log("[restore] legacy/unknown parity layout in snapshot;"
+                         " re-encoding from restored params")
+                self.store = ReliableStore.protect(self.state["params"],
+                                                   cfg, backend)
+            self.scrub_trajectory.n_blocks = self.store.n_blocks
+        elif self.store is not None:
+            self.store = self.store.refresh(self.state["params"])
         self.step = int(snap["step"])
         self.log(f"[restore] resumed from step {self.step}")
         return True
@@ -115,13 +202,15 @@ class TrainLoop:
                 loss = float(metrics.get("loss", metrics.get("total", np.nan)))
                 self.log(f"step {self.step:5d} loss {loss:.4f} ({dt:.3f}s)")
                 self.metrics_history.append((self.step, loss))
-            if self.parity is not None:
+            if self.store is not None:
                 self._refresh_parity()
                 if c.scrub_every and self.step % c.scrub_every == 0:
-                    self._scrub()
+                    if self._scrub():
+                        continue   # restored: step rolled back, re-enter loop
             if (c.checkpoint_every and self.step % c.checkpoint_every == 0) \
                     or decision == Decision.CHECKPOINT_NOW:
                 self.save()
         if self.ckpt is not None:
             self.ckpt.wait()
-        return {"final_step": self.step, "monitor": self.monitor.summary()}
+        return {"final_step": self.step, "monitor": self.monitor.summary(),
+                "scrub": self.scrub_trajectory.summary(c.inject_p_bit)}

@@ -1,9 +1,12 @@
-"""Heartbeat / straggler monitoring.
+"""Heartbeat / straggler / integrity monitoring.
 
 At 1000+ nodes the failure model is: slow nodes (stragglers), dead nodes
 (preemption/hardware), and silent data corruption (the paper's subject).
-The monitor tracks per-step wall times, flags statistical stragglers, and
-exposes a decision: CONTINUE / CHECKPOINT_NOW / RESTART.  In a real
+The monitor tracks per-step wall times, flags statistical stragglers,
+ingests the scrub engine's ScrubReport telemetry, and exposes a decision:
+CONTINUE / CHECKPOINT_NOW / RESTART.  An uncorrectable ECC block is the one
+signal that demands RESTART — the stored weights are known-corrupt beyond
+repair, so the only safe move is a checkpoint restore.  In a real
 deployment the same policy runs per-host and feeds the cluster scheduler;
 here it drives the TrainLoop's simulated fault handling and is unit-tested.
 """
@@ -38,6 +41,10 @@ class HeartbeatMonitor:
         self.consecutive_slow = 0
         self.last_heartbeat = time.monotonic()
         self.flags: List[str] = []
+        self.scrubs = 0
+        self.bits_corrected = 0
+        self.parity_fixed = 0
+        self.uncorrectable = 0
 
     def record_step(self, seconds: float) -> str:
         self.last_heartbeat = time.monotonic()
@@ -53,6 +60,19 @@ class HeartbeatMonitor:
             return Decision.CHECKPOINT_NOW
         return Decision.CONTINUE
 
+    def record_scrub(self, corrected: int, parity_fixed: int,
+                     uncorrectable: int) -> str:
+        """Ingest one ScrubReport; uncorrectable blocks demand RESTART."""
+        self.scrubs += 1
+        self.bits_corrected += int(corrected)
+        self.parity_fixed += int(parity_fixed)
+        self.uncorrectable += int(uncorrectable)
+        if int(uncorrectable) > 0:
+            self.flags.append(
+                f"uncorrectable ECC: {int(uncorrectable)} blocks")
+            return Decision.RESTART
+        return Decision.CONTINUE
+
     def heartbeat_ok(self) -> bool:
         return (time.monotonic() - self.last_heartbeat) < self.policy.heartbeat_timeout_s
 
@@ -65,4 +85,8 @@ class HeartbeatMonitor:
     def summary(self) -> Dict:
         return {"median_step_s": self.median(),
                 "consecutive_slow": self.consecutive_slow,
-                "n_flags": len(self.flags)}
+                "n_flags": len(self.flags),
+                "scrubs": self.scrubs,
+                "bits_corrected": self.bits_corrected,
+                "parity_fixed": self.parity_fixed,
+                "uncorrectable": self.uncorrectable}

@@ -6,6 +6,7 @@ import sys
 # sharding tests) force placeholder devices.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks pkg
+sys.path.insert(0, os.path.dirname(__file__))  # _hypothesis_compat shim
 
 import jax
 import pytest

@@ -56,3 +56,28 @@ def test_restore_resharded_places_leaves(tmp_path, key):
     np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
                                   np.asarray(state["params"]["w"]))
     assert isinstance(out["params"]["w"], jax.Array)
+
+
+def test_crash_between_resave_renames_leaves_restorable_snapshot(tmp_path):
+    """Regression: a re-save of an existing step moves it to step_X.old
+    before publishing; if the process dies between the two renames, the
+    aside copy must still be discoverable and restorable."""
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(5, {"x": np.arange(3)})
+    final = os.path.join(str(tmp_path), "step_00000005")
+    os.replace(final, final + ".old")        # simulate mid-_write crash
+    ck2 = Checkpointer(str(tmp_path), async_save=False)
+    assert ck2.latest_step() == 5
+    assert np.array_equal(ck2.restore()["x"], np.arange(3))
+    # a later save of the same step publishes normally and heals the aside
+    ck2.save(5, {"x": np.arange(4)}, block=True)
+    assert sorted(os.listdir(tmp_path)) == ["step_00000005"]
+    assert np.array_equal(ck2.restore()["x"], np.arange(4))
+
+
+def test_restore_missing_step_raises_filenotfound(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=1, async_save=False)
+    ck.save(1, {"x": np.arange(2)})
+    ck.save(2, {"x": np.arange(2)})          # keep=1 garbage-collects step 1
+    with pytest.raises(FileNotFoundError):
+        ck.restore(step=1)

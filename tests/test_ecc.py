@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import ecc
 
@@ -100,6 +100,41 @@ def test_incremental_row_update_matches_full_encode(seed, row):
     full = ecc.encode(d.at[row, :].set(new_row), cfg)
     for s in cfg.slopes:
         assert (inc[s] == full[s]).all()
+
+
+# --- incremental updates with non-coprime slopes ---------------------------
+# gcd(s, m) != 1 means a slope's diagonal visits only m/gcd groups per
+# column write, so several local rows fold into the same parity group; the
+# scatter-add (mod 2) in update_parity_* must still match a full re-encode.
+
+NONCOPRIME_CFGS = [ecc.EccConfig(m=16, slopes=(1, 2, 4)),   # gcd(2,16)=2, gcd(4,16)=4
+                   ecc.EccConfig(m=8, slopes=(1, 2, 6))]    # gcd(2,8)=2, gcd(6,8)=2
+
+
+@pytest.mark.parametrize("cfg", NONCOPRIME_CFGS, ids=lambda c: f"m{c.m}s{c.slopes}")
+@pytest.mark.parametrize("col", [0, 3, 7])
+def test_incremental_column_update_noncoprime_slopes(cfg, col):
+    rows, cols = cfg.m * 3, cfg.m * 2
+    d = _data(11, rows, cols)
+    par = ecc.encode(d, cfg)
+    new_col = jax.random.bernoulli(jax.random.PRNGKey(12 + col), 0.5, (rows,))
+    inc = ecc.update_parity_col(par, d[:, col], new_col, col, cfg)
+    full = ecc.encode(d.at[:, col].set(new_col), cfg)
+    for s in cfg.slopes:
+        assert (inc[s] == full[s]).all(), f"slope {s}"
+
+
+@pytest.mark.parametrize("cfg", NONCOPRIME_CFGS, ids=lambda c: f"m{c.m}s{c.slopes}")
+@pytest.mark.parametrize("row", [0, 5, 11])
+def test_incremental_row_update_noncoprime_slopes(cfg, row):
+    rows, cols = cfg.m * 3, cfg.m * 2
+    d = _data(13, rows, cols)
+    par = ecc.encode(d, cfg)
+    new_row = jax.random.bernoulli(jax.random.PRNGKey(14 + row), 0.5, (cols,))
+    inc = ecc.update_parity_row(par, d[row, :], new_row, row, cfg)
+    full = ecc.encode(d.at[row, :].set(new_row), cfg)
+    for s in cfg.slopes:
+        assert (inc[s] == full[s]).all(), f"slope {s}"
 
 
 def test_overhead():

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.core.multpim import multiplier_netlist
-from repro.kernels.diag_parity import encode_parity, encode_parity_ref
+from repro.kernels.diag_parity import (encode_parity, encode_parity_ref,
+                                       scrub, scrub_ref)
 from repro.kernels.tmr_vote import vote, vote_ref
 from repro.kernels.crossbar_nor import execute_netlist, execute_netlist_ref
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
@@ -24,9 +25,89 @@ def test_diag_parity_sweep(n_blocks, slopes):
     assert (np.asarray(got) == np.asarray(want)).all()
 
 
+# --- fused scrub: bit-exact vs the jnp oracle across an injection sweep ------
+
+def _ecc_case(n_blocks, seed):
+    from repro.core.reliability import encode_words
+    key = jax.random.PRNGKey(seed)
+    buf = jax.random.randint(key, (n_blocks * 32,), 0, 1 << 30,
+                             jnp.int32).astype(jnp.uint32)
+    return buf, encode_words(buf)
+
+
+def _assert_scrub_matches_oracle(buf, parity):
+    got = scrub(buf, parity)
+    want = scrub_ref(buf, parity)
+    for g, w, name in zip(got, want, ["words", "parity", "counts"]):
+        assert (np.asarray(g) == np.asarray(w)).all(), name
+    return [int(c) for c in got[2]]
+
+
+@pytest.mark.parametrize("n_blocks", [1, 7, 256, 300])
+def test_scrub_kernel_clean(n_blocks):
+    buf, par = _ecc_case(n_blocks, n_blocks)
+    counts = _assert_scrub_matches_oracle(buf, par)
+    assert counts == [0, 0, 0]
+
+
+@pytest.mark.parametrize("block,word,bit", [(0, 0, 0), (3, 31, 31), (7, 13, 5)])
+def test_scrub_kernel_single_data_flip(block, word, bit):
+    buf, par = _ecc_case(8, 17)
+    bad = buf.at[block * 32 + word].set(buf[block * 32 + word] ^ jnp.uint32(1 << bit))
+    counts = _assert_scrub_matches_oracle(bad, par)
+    assert counts == [1, 0, 0]
+    fixed, _, _ = scrub(bad, par)
+    assert (np.asarray(fixed) == np.asarray(buf)).all()
+
+
+@pytest.mark.parametrize("family,bit", [(0, 0), (1, 9), (2, 31)])
+def test_scrub_kernel_parity_word_flip(family, bit):
+    buf, par = _ecc_case(8, 23)
+    bad_par = par.at[2, family].set(par[2, family] ^ jnp.uint32(1 << bit))
+    counts = _assert_scrub_matches_oracle(buf, bad_par)
+    assert counts == [0, 1, 0]
+    _, par2, _ = scrub(buf, bad_par)
+    assert (np.asarray(par2) == np.asarray(par)).all()
+
+
+@pytest.mark.parametrize("flips", [
+    [(0, 0, 0), (0, 5, 17)],              # 2 flips, different words, same block
+    [(2, 3, 4), (2, 3, 9)],               # 2 flips, same word
+    [(1, 0, 0), (1, 1, 1), (1, 2, 2)],    # 3 flips, one block
+])
+def test_scrub_kernel_multi_flip_uncorrectable(flips):
+    buf, par = _ecc_case(4, 29)
+    bad = buf
+    for b, w, bit in flips:
+        bad = bad.at[b * 32 + w].set(bad[b * 32 + w] ^ jnp.uint32(1 << bit))
+    counts = _assert_scrub_matches_oracle(bad, par)
+    assert counts[2] == 1
+
+
+def test_scrub_kernel_mixed_random_sweep():
+    """Random mixture of clean / single-flip / multi-flip / parity-flip
+    blocks stays bit-exact vs the oracle."""
+    buf, par = _ecc_case(64, 31)
+    rng = np.random.default_rng(0)
+    bad, bad_par = buf, par
+    for b in range(0, 64, 3):               # single data flips
+        w, bit = rng.integers(32), rng.integers(32)
+        bad = bad.at[b * 32 + w].set(bad[b * 32 + w] ^ jnp.uint32(1 << int(bit)))
+    for b in range(1, 64, 7):               # double flips -> uncorrectable
+        for _ in range(2):
+            w, bit = rng.integers(32), rng.integers(32)
+            bad = bad.at[b * 32 + w].set(bad[b * 32 + w] ^ jnp.uint32(1 << int(bit)))
+    for b in range(2, 64, 11):              # parity-word flips
+        f, bit = rng.integers(3), rng.integers(32)
+        bad_par = bad_par.at[b, f].set(bad_par[b, f] ^ jnp.uint32(1 << int(bit)))
+    _assert_scrub_matches_oracle(bad, bad_par)
+
+
 # --- tmr_vote ----------------------------------------------------------------
 
-@pytest.mark.parametrize("shape", [(5,), (33, 7), (4, 3, 17), (128, 512)])
+@pytest.mark.parametrize("shape", [(5,), (33, 7), (4, 3, 17), (128, 512),
+                                   (300, 512),      # >256 rows, not a 256-multiple
+                                   (50257,)])       # vocab-sized odd leaf
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
 def test_tmr_vote_sweep(shape, dtype):
     key = jax.random.PRNGKey(hash(shape) % 1000)

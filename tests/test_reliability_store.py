@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import reliability as R
 
@@ -69,3 +69,51 @@ def test_store_scrub_corrects_sparse_corruption(key, p_bit):
 def test_storage_overhead():
     cfg = R.WordEccConfig()
     assert cfg.n_parity_words / R.BLOCK == pytest.approx(3 / 32)  # ~9.4%
+
+
+def test_odd_length_bf16_leaf_protect_flip_scrub(key):
+    """Regression: odd-element bfloat16 leaves share their last arena word
+    with a zero pad half-word; protect -> flip -> scrub must round-trip."""
+    for n in (1, 33, 129):
+        x = jax.random.normal(jax.random.fold_in(key, n), (n,), jnp.bfloat16)
+        params = {"w": x}
+        store = R.ReliableStore.protect(params)
+        # flip one mantissa bit of the LAST element (lives in the half-word
+        # next to the padding)
+        u16 = jax.lax.bitcast_convert_type(x, jnp.uint16)
+        bad_x = jax.lax.bitcast_convert_type(
+            u16.at[n - 1].set(u16[n - 1] ^ jnp.uint16(1 << 3)), jnp.bfloat16)
+        fixed, rep = R.ReliableStore({"w": bad_x}, store.parity).scrub()
+        assert int(rep.corrected) == 1, n
+        assert int(rep.uncorrectable) == 0, n
+        assert np.array_equal(np.asarray(fixed.params["w"], np.float32),
+                              np.asarray(x, np.float32)), n
+
+
+def test_store_backends_agree(key):
+    params = {"a": jax.random.normal(key, (67, 5), jnp.float32),
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (77,), jnp.bfloat16)}
+    bad = R.inject_bit_flips(params, jax.random.fold_in(key, 2), 1e-4)
+    parity = R.ReliableStore.protect(params).parity
+    f_k, r_k = R.ReliableStore(bad, parity, backend="kernel").scrub()
+    f_j, r_j = R.ReliableStore(bad, parity, backend="jnp").scrub()
+    assert [int(v) for v in r_k] == [int(v) for v in r_j]
+    for k in params:
+        assert np.array_equal(np.asarray(f_k.params[k], np.float32),
+                              np.asarray(f_j.params[k], np.float32))
+
+
+def test_per_leaf_legacy_path_matches_arena(key):
+    params = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                         (31 + i,), jnp.float32)
+              for i in range(6)}
+    bad = R.inject_bit_flips(params, jax.random.fold_in(key, 99), 1e-4)
+    ptree = R.protect_leaves(params)
+    fixed_tree, _, rep_leaf = R.scrub_leaves(bad, ptree)
+    store = R.ReliableStore.protect(params)
+    fixed_arena, rep_arena = R.ReliableStore(bad, store.parity).scrub()
+    assert int(rep_leaf.corrected) == int(rep_arena.corrected)
+    assert int(rep_leaf.uncorrectable) == int(rep_arena.uncorrectable)
+    for k in params:
+        assert np.array_equal(np.asarray(fixed_tree[k]),
+                              np.asarray(fixed_arena.params[k]))
