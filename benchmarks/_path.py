@@ -1,0 +1,20 @@
+"""Single sys.path bootstrap for the benchmark modules.
+
+Each benchmark historically did its own ``sys.path.insert(0, "src")`` —
+which only worked when the CWD was the repo root, and mutated sys.path once
+per imported module.  Importing this module instead inserts the absolute
+``src/`` path exactly once, idempotently:
+
+    try:                      # package execution: python -m benchmarks.run
+        from . import _path   # noqa: F401
+    except ImportError:       # direct script: python benchmarks/fig4_mult.py
+        import _path          # noqa: F401
+
+(With the repro package pip-installed the import is a harmless no-op.)
+"""
+import os
+import sys
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

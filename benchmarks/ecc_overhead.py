@@ -9,9 +9,11 @@ in-column ops (the naive baseline of Fig. 2a).
 """
 from __future__ import annotations
 
-import sys
 
-sys.path.insert(0, "src")
+try:                      # package execution: python -m benchmarks.<mod>
+    from . import _path   # noqa: F401
+except ImportError:       # direct script execution
+    import _path          # noqa: F401
 
 # cycle model: a vectored stateful gate = 1 cycle; the diagonal ECC update
 # per written column = |families| XOR gate-steps (barrel-shifted, parallel

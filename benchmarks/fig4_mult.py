@@ -10,10 +10,12 @@ bottleneck near p_gate = 1e-9).
 """
 from __future__ import annotations
 
-import sys
 import time
 
-sys.path.insert(0, "src")
+try:                      # package execution: python -m benchmarks.<mod>
+    from . import _path   # noqa: F401
+except ImportError:       # direct script execution
+    import _path          # noqa: F401
 
 import jax
 import jax.numpy as jnp

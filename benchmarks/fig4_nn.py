@@ -8,9 +8,11 @@ al.); p_misclassify = 1 - (1 - p_mask * p_mult)^M.  The paper's headline:
 """
 from __future__ import annotations
 
-import sys
 
-sys.path.insert(0, "src")
+try:                      # package execution: python -m benchmarks.<mod>
+    from . import _path   # noqa: F401
+except ImportError:       # direct script execution
+    import _path          # noqa: F401
 
 import numpy as np
 

@@ -7,17 +7,20 @@ rate.
 """
 from __future__ import annotations
 
-import sys
 import time
 
-sys.path.insert(0, "src")
+try:                      # package execution: python -m benchmarks.<mod>
+    from . import _path   # noqa: F401
+except ImportError:       # direct script execution
+    import _path          # noqa: F401
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import analytics as A
-from repro.core.reliability import ReliableStore, inject_bit_flips
+from repro.core.reliability import ReliableStore
+from repro.faults import inject_bit_flips
 
 
 def simulate_store(p_bit: float, batches: int, n_weights: int = 4096) -> int:

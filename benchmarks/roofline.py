@@ -28,7 +28,10 @@ PEAK_FLOPS = 197e12       # bf16 / chip
 HBM_BW = 819e9            # bytes/s
 LINK_BW = 50e9            # bytes/s/link
 
-sys.path.insert(0, "src")
+try:                      # package execution: python -m benchmarks.<mod>
+    from . import _path   # noqa: F401
+except ImportError:       # direct script execution
+    import _path          # noqa: F401
 
 from repro.configs import get_config  # noqa: E402
 from repro.models.config import ModelConfig  # noqa: E402

@@ -1,29 +1,45 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Run with:
-    PYTHONPATH=src python -m benchmarks.run [--only fig4_mult,...]
+Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` additionally
+writes the same rows machine-readably (the ``BENCH_*.json`` trajectory
+artifact CI uploads).  Run with:
+    PYTHONPATH=src python -m benchmarks.run [--only fig4_mult,...] \
+        [--json bench.json] [--smoke]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
 
-sys.path.insert(0, "src")
+try:                      # package execution: python -m benchmarks.<mod>
+    from . import _path   # noqa: F401
+except ImportError:       # direct script execution
+    import _path          # noqa: F401
 
 MODULES = ["fig4_mult", "fig4_nn", "fig5_weights", "ecc_overhead",
-           "tmr_tradeoff", "kernels_bench"]
+           "tmr_tradeoff", "kernels_bench", "campaign_mc"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(MODULES))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON to PATH")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink trial budgets (sets REPRO_BENCH_SMOKE=1 "
+                         "for modules that scale with it)")
     args = ap.parse_args()
     mods = args.only.split(",") if args.only else MODULES
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     print("name,us_per_call,derived")
+    rows = []
     failures = 0
     for name in mods:
         t0 = time.time()
@@ -31,10 +47,25 @@ def main() -> None:
             mod = __import__(f"benchmarks.{name}", fromlist=[name])
             for row_name, us, derived in mod.run():
                 print(f"{row_name},{us:.3f},{derived}", flush=True)
+                rows.append({"module": name, "name": row_name,
+                             "us_per_call": round(us, 3),
+                             "derived": str(derived)})
         except Exception:
             failures += 1
-            print(f"{name}.ERROR,0,{traceback.format_exc(limit=2)!r}", flush=True)
-        print(f"{name}.total_wall_s,{(time.time()-t0)*1e6:.0f},-", flush=True)
+            err = traceback.format_exc(limit=2)
+            print(f"{name}.ERROR,0,{err!r}", flush=True)
+            rows.append({"module": name, "name": f"{name}.ERROR",
+                         "us_per_call": 0.0, "derived": err})
+        wall_us = (time.time() - t0) * 1e6
+        print(f"{name}.total_wall_s,{wall_us:.0f},-", flush=True)
+        rows.append({"module": name, "name": f"{name}.total_wall_s",
+                     "us_per_call": round(wall_us, 0), "derived": "-"})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"modules": mods, "smoke": bool(args.smoke),
+                       "failures": failures, "unix_time": int(time.time()),
+                       "rows": rows}, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}", file=sys.stderr)
     sys.exit(1 if failures else 0)
 
 

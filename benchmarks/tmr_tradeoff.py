@@ -4,10 +4,12 @@ the periphery-based alternative's 1024x latency penalty the paper cites.
 """
 from __future__ import annotations
 
-import sys
 import time
 
-sys.path.insert(0, "src")
+try:                      # package execution: python -m benchmarks.<mod>
+    from . import _path   # noqa: F401
+except ImportError:       # direct script execution
+    import _path          # noqa: F401
 
 import jax
 import jax.numpy as jnp

@@ -13,6 +13,13 @@ Two error processes (paper §II-B):
              it with probability p_input (state drift / read disturb);
              time-based retention drift is modeled by `drift(key, p, dt)`.
 
+Error processes are drawn from the unified fault taxonomy
+(repro.faults.models): `ErrorModel` either wraps raw probabilities into the
+default transient/drift models (back-compat) or takes explicit FaultModel
+instances per channel, so the same campaign scenarios (stuck-at defects,
+composite drift+transient, ...) drive the crossbar simulation and the
+arena-level experiments.
+
 The simulator is functional: every op returns a new state.
 """
 from __future__ import annotations
@@ -24,17 +31,46 @@ import jax
 import jax.numpy as jnp
 
 from . import stateful_logic as sl
+from ..faults.models import FaultModel, RetentionDrift, TransientBitFlips
 
 __all__ = ["Crossbar", "ErrorModel"]
 
 
 @dataclasses.dataclass(frozen=True)
 class ErrorModel:
-    """Soft-error rates for the crossbar simulation."""
+    """Error processes for the crossbar simulation.
+
+    Back-compat surface: raw per-event probabilities (p_gate, p_input,
+    p_retention), wrapped on demand into the default FaultModels.  Scenario
+    surface: pass any faults.FaultModel per channel (`gate`, `input`,
+    `retention`) to override the default process — e.g.
+    ErrorModel(input=StuckAtFaults(1e-4, 1e-4)) pins defective cells
+    instead of drawing i.i.d. transient flips.
+    """
 
     p_gate: float = 0.0     # direct: incorrect stateful gate output
     p_input: float = 0.0    # indirect: corruption of accessed (input) bits
     p_retention: float = 0.0  # indirect: per-bit drift per time unit
+    gate: Optional[FaultModel] = None       # overrides p_gate
+    input: Optional[FaultModel] = None      # overrides p_input
+    retention: Optional[FaultModel] = None  # overrides p_retention
+
+    def gate_param(self):
+        """What the gate primitives receive: a float (fast path, exact
+        historic draws) or the overriding FaultModel."""
+        return self.gate if self.gate is not None else self.p_gate
+
+    def input_model(self) -> FaultModel:
+        return self.input if self.input is not None \
+            else TransientBitFlips(self.p_input)
+
+    def retention_model(self) -> FaultModel:
+        return self.retention if self.retention is not None \
+            else RetentionDrift(self.p_retention)
+
+    @property
+    def has_input_noise(self) -> bool:
+        return self.input is not None or self.p_input > 0.0
 
 
 @dataclasses.dataclass
@@ -65,28 +101,28 @@ class Crossbar:
     def _read_cols(self, cols: Sequence[int], key: Optional[jax.Array]):
         """Read input columns; optionally corrupt the *stored* inputs."""
         vals = [self.state[:, c] for c in cols]
-        if key is None or self.errors.p_input == 0.0:
+        if key is None or not self.errors.has_input_noise:
             return vals, self.state
+        model = self.errors.input_model()
         new_state = self.state
         keys = jax.random.split(key, len(cols))
         out_vals = []
         for c, k, v in zip(cols, keys, vals):
-            flips = jax.random.bernoulli(k, self.errors.p_input, shape=v.shape)
-            corrupted = jnp.logical_xor(v, flips)
+            corrupted = model.corrupt_bits(v, k)
             new_state = new_state.at[:, c].set(corrupted)
             out_vals.append(corrupted)
         return out_vals, new_state
 
     def _read_rows(self, rows: Sequence[int], key: Optional[jax.Array]):
         vals = [self.state[r, :] for r in rows]
-        if key is None or self.errors.p_input == 0.0:
+        if key is None or not self.errors.has_input_noise:
             return vals, self.state
+        model = self.errors.input_model()
         new_state = self.state
         keys = jax.random.split(key, len(rows))
         out_vals = []
         for r, k, v in zip(rows, keys, vals):
-            flips = jax.random.bernoulli(k, self.errors.p_input, shape=v.shape)
-            corrupted = jnp.logical_xor(v, flips)
+            corrupted = model.corrupt_bits(v, k)
             new_state = new_state.at[r, :].set(corrupted)
             out_vals.append(corrupted)
         return out_vals, new_state
@@ -100,7 +136,7 @@ class Crossbar:
         if key is not None:
             k_in, k_g = jax.random.split(key)
         ins, state = self._read_cols(in_cols, k_in)
-        out = _apply(gate, ins, k_g, self.errors.p_gate)
+        out = _apply(gate, ins, k_g, self.errors.gate_param())
         new = state.at[:, out_col].set(out)
         self.counter.tick(n_parallel=self.shape[0], cycles=sl.GATE_COSTS[gate])
         return self._with(new)
@@ -114,7 +150,7 @@ class Crossbar:
         if key is not None:
             k_in, k_g = jax.random.split(key)
         ins, state = self._read_rows(in_rows, k_in)
-        out = _apply(gate, ins, k_g, self.errors.p_gate)
+        out = _apply(gate, ins, k_g, self.errors.gate_param())
         new = state.at[out_row, :].set(out)
         self.counter.tick(n_parallel=self.shape[1], cycles=sl.GATE_COSTS[gate])
         return self._with(new)
@@ -135,17 +171,17 @@ class Crossbar:
         if key is not None:
             k_in, k_g = jax.random.split(key)
         ins = [view[:, :, o] for o in in_offsets]
-        if k_in is not None and self.errors.p_input > 0.0:
+        if k_in is not None and self.errors.has_input_noise:
+            model = self.errors.input_model()
             keys = jax.random.split(k_in, len(ins))
             new_view = view
             tmp = []
             for o, k, v in zip(in_offsets, keys, ins):
-                flips = jax.random.bernoulli(k, self.errors.p_input, shape=v.shape)
-                cv = jnp.logical_xor(v, flips)
+                cv = model.corrupt_bits(v, k)
                 new_view = new_view.at[:, :, o].set(cv)
                 tmp.append(cv)
             ins, view = tmp, new_view
-        out = _apply(gate, ins, k_g, self.errors.p_gate)
+        out = _apply(gate, ins, k_g, self.errors.gate_param())
         new = view.at[:, :, out_offset].set(out).reshape(n_rows, n_cols)
         self.counter.tick(n_parallel=n_rows * n_parts, cycles=sl.GATE_COSTS[gate])
         return self._with(new)
@@ -168,10 +204,10 @@ class Crossbar:
         return self._with(self.state.at[row, :].set(vals))
 
     def drift(self, key: jax.Array, dt: float = 1.0) -> "Crossbar":
-        """Retention/state-drift + abrupt events over a time interval dt."""
-        p = 1.0 - (1.0 - self.errors.p_retention) ** dt
-        flips = jax.random.bernoulli(key, p, self.state.shape)
-        return self._with(jnp.logical_xor(self.state, flips))
+        """Retention/state-drift + abrupt events over a time interval dt,
+        drawn from the retention FaultModel (RetentionDrift by default)."""
+        model = self.errors.retention_model()
+        return self._with(model.corrupt_bits(self.state, key, dt))
 
 
 def _apply(gate: str, ins, key, p_gate):
@@ -187,6 +223,6 @@ def _apply(gate: str, ins, key, p_gate):
     }
     if gate not in fns:
         raise ValueError(f"unknown gate {gate!r}")
-    if key is None or p_gate == 0.0:
+    if key is None or (not isinstance(p_gate, FaultModel) and p_gate == 0.0):
         key = None
     return fns[gate](ins, key)

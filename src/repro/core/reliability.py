@@ -257,19 +257,11 @@ def scrub_leaves(params: Any, parity_tree: Any,
     return treedef.unflatten(out_p), treedef.unflatten(out_c), total
 
 
-def inject_bit_flips(params: Any, key: jax.Array, p_bit: float) -> Any:
-    """Indirect-soft-error injector: flip each stored bit w.p. p_bit."""
-    leaves, treedef = jax.tree.flatten(params)
-    keys = jax.random.split(key, len(leaves))
-    out = []
-    for x, k in zip(leaves, keys):
-        words = arena.leaf_to_words(x)
-        flips = jax.random.bernoulli(k, p_bit, (words.shape[0], BLOCK))
-        mask = (flips.astype(jnp.uint32) << jnp.arange(BLOCK, dtype=jnp.uint32)[None, :]).sum(
-            axis=1, dtype=jnp.uint32)
-        out.append(arena.words_to_leaf(words ^ mask,
-                                       _leaf_spec(x, words.shape[0])))
-    return treedef.unflatten(out)
+# Deprecated re-export: the canonical transient injector moved to the fault
+# subsystem (repro.faults.models) as part of the unified FaultModel taxonomy.
+# Kept so historic `from repro.core.reliability import inject_bit_flips`
+# call sites keep working; new code should use repro.faults directly.
+from ..faults.models import inject_bit_flips  # noqa: E402,F401
 
 
 def tmr_serve(serve_fn, mode: str = "serial", use_kernel: bool = True):

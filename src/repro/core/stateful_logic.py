@@ -10,7 +10,10 @@ Error model (paper §II-B, "direct" soft errors): each gate evaluation
 produces the wrong output with probability ``p_gate`` (independently per row,
 per gate).  Injection is explicit — every primitive takes an optional
 ``(key, p_gate)`` pair so that reliability experiments control the fault
-stream deterministically.
+stream deterministically.  ``p_gate`` may also be any
+``repro.faults.FaultModel`` (the unified taxonomy), whose bit-level sampler
+then supplies the corruption — e.g. ``StuckAtFaults`` for permanently
+defective output cells instead of i.i.d. transient flips.
 
 Cycle accounting: each stateful gate is one crossbar cycle regardless of how
 many rows it spans (that is the whole point of the paper).  ``CycleCounter``
@@ -23,6 +26,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from ..faults.models import FaultModel
 
 __all__ = [
     "CycleCounter",
@@ -61,9 +66,12 @@ class CycleCounter:
 
 
 def maybe_flip(out: jax.Array, key: Optional[jax.Array], p_gate) -> jax.Array:
-    """Flip each output bit independently with probability p_gate."""
+    """Corrupt gate output: p_gate is a float flip probability (each output
+    bit flips independently) or a faults.FaultModel applied to the output."""
     if key is None:
         return out
+    if isinstance(p_gate, FaultModel):
+        return p_gate.corrupt_bits(out, key)
     flips = jax.random.bernoulli(key, p_gate, shape=out.shape)
     return jnp.logical_xor(out, flips)
 

@@ -1,0 +1,27 @@
+"""Fault-injection subsystem: unified error models + Monte-Carlo campaigns.
+
+Single source of truth for every error process in the repo (DESIGN.md §10):
+
+  models.py   — the FaultModel taxonomy: transient bit/gate flips, permanent
+                stuck-at-0/1 defect masks, time-dependent retention drift.
+                Each model is a pure JAX sampler keyed by (key, shape, dt),
+                so fault streams are deterministic, replayable and vmappable.
+  campaign.py — batched Monte-Carlo runner: vmapped trials over seeds,
+                streaming Wilson-interval statistics, sweep grids and an
+                early-stop rule on confidence-interval width.
+
+The fused inject→encode→syndrome→correct Pallas kernel that executes a whole
+trial's corruption+scrub as one launch lives in kernels/inject_scrub/.
+"""
+from .models import (CompositeFault, FaultModel, RetentionDrift,
+                     StuckAtFaults, TransientBitFlips, TransientGateFaults,
+                     inject_bit_flips)
+from .campaign import (CampaignConfig, CampaignResult, run_campaign, sweep,
+                       wilson_interval)
+
+__all__ = [
+    "FaultModel", "TransientBitFlips", "TransientGateFaults", "StuckAtFaults",
+    "RetentionDrift", "CompositeFault", "inject_bit_flips",
+    "CampaignConfig", "CampaignResult", "run_campaign", "sweep",
+    "wilson_interval",
+]

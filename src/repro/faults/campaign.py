@@ -1,0 +1,166 @@
+"""Batched Monte-Carlo fault campaigns with streaming Wilson statistics.
+
+A campaign estimates a failure probability empirically: run many
+independent trials of `trial_fn(key) -> failed?`, stream the pass/fail
+counts, and report a Wilson score interval.  Design points (DESIGN.md §10):
+
+* **batched** — trials are vmapped over a batch of PRNG keys and reduced
+  *on device*; only scalar counters cross to the host, so per-trial results
+  are never materialized (a 4096-trial campaign moves a handful of ints);
+* **deterministic** — batch b draws its keys from fold_in(key, b); a
+  campaign is replayable from (key, config) alone;
+* **early stop** — after `min_trials`, the campaign stops as soon as the
+  Wilson interval half-width drops below `ci_halfwidth` (0 disables);
+* **sweeps** — `sweep()` runs one campaign per grid point (e.g. over
+  p_gate / p_bit / scrub interval), deriving a distinct key per point.
+
+Trials can also return auxiliary per-trial counters (corrected,
+uncorrectable, injected, ...) as a dict of scalars; these are summed into
+`CampaignResult.extras` by the same streaming reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CampaignConfig", "CampaignResult", "wilson_interval",
+           "run_campaign", "sweep"]
+
+
+def wilson_interval(k: int, n: int, z: float = 1.96) -> Tuple[float, float]:
+    """Wilson score interval for k failures in n Bernoulli trials.
+
+    Preferred over the normal approximation because campaign operating
+    points sit in the rare-event regime (k near 0), where Wald intervals
+    collapse to a width-0 lie.
+    """
+    if n <= 0:
+        return 0.0, 1.0
+    p = k / n
+    z2 = z * z
+    denom = 1.0 + z2 / n
+    center = (p + z2 / (2 * n)) / denom
+    half = (z / denom) * math.sqrt(p * (1.0 - p) / n + z2 / (4.0 * n * n))
+    return max(0.0, center - half), min(1.0, center + half)
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignConfig:
+    batch_size: int = 256        # trials per device launch
+    max_trials: int = 4096       # hard budget
+    min_trials: int = 512        # never early-stop before this many
+    ci_halfwidth: float = 0.0    # stop once Wilson half-width <= this (0 = off)
+    z: float = 1.96              # 95% interval
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    """Streaming summary of one campaign (one operating point)."""
+
+    name: str
+    n_trials: int
+    failures: int
+    z: float = 1.96
+    extras: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def p_hat(self) -> float:
+        return self.failures / self.n_trials if self.n_trials else 0.0
+
+    @property
+    def ci(self) -> Tuple[float, float]:
+        return wilson_interval(self.failures, self.n_trials, self.z)
+
+    @property
+    def ci_halfwidth(self) -> float:
+        lo, hi = self.ci
+        return (hi - lo) / 2.0
+
+    def contains(self, p_model: float) -> bool:
+        """Does the closed-form prediction fall inside the Wilson interval?"""
+        lo, hi = self.ci
+        return lo <= p_model <= hi
+
+    def describe(self) -> str:
+        lo, hi = self.ci
+        s = (f"{self.name}: p_hat={self.p_hat:.4g} "
+             f"[{lo:.4g}, {hi:.4g}] n={self.n_trials}")
+        if self.extras:
+            s += " " + " ".join(f"{k}={v:g}" for k, v in
+                                sorted(self.extras.items()))
+        return s
+
+
+def _normalize(out) -> Tuple[jax.Array, Mapping[str, jax.Array]]:
+    if isinstance(out, tuple):
+        fail, extras = out
+        return jnp.asarray(fail), extras
+    return jnp.asarray(out), {}
+
+
+def run_campaign(trial_fn: Callable, key: jax.Array,
+                 cfg: CampaignConfig = CampaignConfig(), *,
+                 batched: bool = False, name: str = "") -> CampaignResult:
+    """Estimate P[failure] of `trial_fn` by batched Monte Carlo.
+
+    trial_fn signatures:
+      batched=False: trial_fn(key) -> failed_bool  (or (failed, extras_dict))
+                     — vmapped over a key batch and jit'd here;
+      batched=True:  trial_fn(key, n) -> failed_bool[n] (or (failed, extras))
+                     — the trial already runs a whole batch in one launch
+                     (e.g. one arena block per trial through the fused
+                     inject+scrub kernel).
+
+    Per-batch results are reduced on device; only the scalar sums are
+    pulled to the host (streaming — no per-trial materialization).
+    """
+    if batched:
+        batch_fn = trial_fn
+    else:
+        vmapped = jax.jit(jax.vmap(trial_fn))
+
+        def batch_fn(k, n):
+            return vmapped(jax.random.split(k, n))
+
+    n = failures = 0
+    extras_acc: Dict[str, float] = {}
+    b = 0
+    while n < cfg.max_trials:
+        size = min(cfg.batch_size, cfg.max_trials - n)
+        fail, extras = _normalize(batch_fn(jax.random.fold_in(key, b), size))
+        b += 1
+        assert fail.shape == (size,), (fail.shape, size)
+        failures += int(jnp.sum(fail))
+        n += size
+        for k2, v in extras.items():
+            extras_acc[k2] = extras_acc.get(k2, 0.0) + float(jnp.sum(v))
+        if cfg.ci_halfwidth > 0 and n >= cfg.min_trials:
+            lo, hi = wilson_interval(failures, n, cfg.z)
+            if (hi - lo) / 2.0 <= cfg.ci_halfwidth:
+                break
+    return CampaignResult(name=name, n_trials=n, failures=failures,
+                          z=cfg.z, extras=extras_acc)
+
+
+def sweep(make_trial: Callable[..., Callable], points: Sequence[Mapping[str, Any]],
+          key: jax.Array, cfg: CampaignConfig = CampaignConfig(), *,
+          batched: bool = False) -> List[Tuple[Mapping[str, Any], CampaignResult]]:
+    """Run one campaign per grid point.
+
+    make_trial(**point) builds the trial function for that operating point
+    (static parameters — p_gate, p_bit, scrub interval — are closed over,
+    so each point jit-compiles once).  Point i draws its campaign key from
+    fold_in(key, i): points are independent and individually replayable.
+    """
+    out = []
+    for i, pt in enumerate(points):
+        trial = make_trial(**pt)
+        label = ",".join(f"{k}={v:g}" if isinstance(v, float) else f"{k}={v}"
+                         for k, v in pt.items())
+        out.append((pt, run_campaign(trial, jax.random.fold_in(key, i), cfg,
+                                     batched=batched, name=label)))
+    return out

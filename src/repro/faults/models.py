@@ -1,0 +1,206 @@
+"""Unified fault-model taxonomy (DESIGN.md §10).
+
+The paper evaluates reliability along two axes: short-term soft errors
+(transient gate/bit flips, §II-B) and long-term degradation of large-scale
+applications (permanent defects and retention drift, §VI).  Every error
+process the repo simulates is expressed here as a `FaultModel` — a frozen
+dataclass whose samplers are *pure functions of (key, shape, dt)*, so a
+fault stream is fully determined by its PRNG key: campaigns replay
+deterministically, disjoint keys give independent streams, and the samplers
+vmap over a batch of trial keys without host-side state.
+
+Three corruption surfaces, one model object:
+
+* boolean state (crossbar cells, netlist gate outputs):
+  `bit_flips(key, shape, dt)` / `corrupt_bits(bits, key, dt)`;
+* packed uint32 words (the ECC arena of core/arena.py):
+  `word_mask(key, words, dt)` / `corrupt_words(words, key, dt)` — the XOR
+  mask feeds the fused inject+scrub kernel (kernels/inject_scrub/);
+* parameter pytrees: `corrupt(params, key, dt)` (the canonical home of the
+  former `core.reliability.inject_bit_flips`).
+
+`dt` is the length of the exposure interval in model time units; transient
+and drift models scale their per-interval flip probability as
+1 - (1 - p)^dt, permanent stuck-at masks are dt-invariant (the defect is a
+property of the device, not of the interval).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import arena
+
+__all__ = ["FaultModel", "TransientBitFlips", "TransientGateFaults",
+           "StuckAtFaults", "RetentionDrift", "CompositeFault",
+           "inject_bit_flips", "pack_flip_mask"]
+
+BLOCK = arena.BLOCK
+
+
+def _p_interval(p: float, dt: float) -> float:
+    """Per-interval flip probability for a per-unit-time rate p over dt."""
+    if dt == 1.0 or p <= 0.0:
+        return p
+    if p >= 1.0:
+        return 1.0
+    return -math.expm1(dt * math.log1p(-p))
+
+
+def pack_flip_mask(flips: jax.Array) -> jax.Array:
+    """Pack a (..., 32) bool flip plane into a (...,) uint32 XOR mask."""
+    shifts = jnp.arange(BLOCK, dtype=jnp.uint32)
+    return (flips.astype(jnp.uint32) << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+class FaultModel:
+    """Abstract error process.  Subclasses are frozen dataclasses (hashable,
+    usable as static jit arguments); all sampling is keyed and pure."""
+
+    @property
+    def permanent(self) -> bool:
+        """True when the model describes a fixed device property (defect
+        maps) rather than an exposure process: consumers that corrupt
+        repeatedly (e.g. once per training step) must then reuse a stable
+        key instead of re-keying per interval, or the 'permanent' defects
+        would relocate every draw."""
+        return False
+
+    # -- boolean-state surface ------------------------------------------------
+    def bit_flips(self, key: jax.Array, shape: Tuple[int, ...],
+                  dt: float = 1.0) -> jax.Array:
+        """Bool XOR plane: True where a stored bit flips during dt."""
+        raise NotImplementedError(
+            f"{type(self).__name__} is data-dependent; use corrupt_bits")
+
+    def corrupt_bits(self, bits: jax.Array, key: jax.Array,
+                     dt: float = 1.0) -> jax.Array:
+        return jnp.logical_xor(bits, self.bit_flips(key, bits.shape, dt))
+
+    # -- packed-word surface (ECC arena) --------------------------------------
+    def word_mask(self, key: jax.Array, words: jax.Array,
+                  dt: float = 1.0) -> jax.Array:
+        """uint32 XOR mask over `words` (may inspect the data for stuck-at)."""
+        return pack_flip_mask(self.bit_flips(key, words.shape + (BLOCK,), dt))
+
+    def corrupt_words(self, words: jax.Array, key: jax.Array,
+                      dt: float = 1.0) -> jax.Array:
+        return words ^ self.word_mask(key, words, dt)
+
+    # -- pytree surface -------------------------------------------------------
+    def corrupt(self, params: Any, key: jax.Array, dt: float = 1.0) -> Any:
+        """Corrupt every leaf's stored bits (via the arena word view)."""
+        leaves, treedef = jax.tree.flatten(params)
+        keys = jax.random.split(key, len(leaves))
+        out = []
+        for x, k in zip(leaves, keys):
+            words = arena.leaf_to_words(x)
+            spec = arena.LeafSpec(offset=0, n_words=words.shape[0],
+                                  pad_words=0, dtype=x.dtype,
+                                  shape=tuple(x.shape))
+            out.append(arena.words_to_leaf(
+                self.corrupt_words(words, k, dt), spec))
+        return treedef.unflatten(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransientBitFlips(FaultModel):
+    """Indirect soft errors: each stored bit flips i.i.d. w.p. p_bit per
+    interval (read disturb / access corruption, paper §II-B)."""
+
+    p_bit: float = 0.0
+
+    def bit_flips(self, key, shape, dt: float = 1.0):
+        return jax.random.bernoulli(key, _p_interval(self.p_bit, dt), shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransientGateFaults(FaultModel):
+    """Direct soft errors: a stateful gate writes the wrong output w.p.
+    p_gate per evaluation (independently per row/column, paper §II-B)."""
+
+    p_gate: float = 0.0
+
+    def bit_flips(self, key, shape, dt: float = 1.0):
+        return jax.random.bernoulli(key, _p_interval(self.p_gate, dt), shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class StuckAtFaults(FaultModel):
+    """Permanent defects: each cell is stuck-at-0 w.p. p_stuck0 and
+    stuck-at-1 w.p. p_stuck1 (disjoint events).  The defect map is a pure
+    function of the key and ignores dt — the same key always yields the
+    same mask, so repeated corruption is idempotent."""
+
+    p_stuck0: float = 0.0
+    p_stuck1: float = 0.0
+
+    @property
+    def permanent(self) -> bool:
+        return True
+
+    def stuck_masks(self, key: jax.Array, shape: Tuple[int, ...]):
+        """(sa0, sa1) bool defect maps; disjoint by construction."""
+        u = jax.random.uniform(key, shape)
+        sa0 = u < self.p_stuck0
+        sa1 = (u >= self.p_stuck0) & (u < self.p_stuck0 + self.p_stuck1)
+        return sa0, sa1
+
+    def corrupt_bits(self, bits, key, dt: float = 1.0):
+        sa0, sa1 = self.stuck_masks(key, bits.shape)
+        return (bits & ~sa0) | sa1
+
+    def word_mask(self, key, words, dt: float = 1.0):
+        sa0, sa1 = self.stuck_masks(key, words.shape + (BLOCK,))
+        sa0w, sa1w = pack_flip_mask(sa0), pack_flip_mask(sa1)
+        return (words & sa0w) | (~words & sa1w)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetentionDrift(FaultModel):
+    """Time-dependent conductance drift (the paper's long-term axis): a
+    stored bit decays w.p. 1 - (1 - p_unit)^dt over an interval of length
+    dt — the continuous-time process behind `Crossbar.drift`."""
+
+    p_unit: float = 0.0
+
+    def bit_flips(self, key, shape, dt: float = 1.0):
+        return jax.random.bernoulli(key, _p_interval(self.p_unit, dt), shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompositeFault(FaultModel):
+    """Sequential composition: each member corrupts with an independent
+    subkey (e.g. drift + stuck-at defects in one campaign scenario)."""
+
+    models: Tuple[FaultModel, ...] = ()
+
+    @property
+    def permanent(self) -> bool:
+        return bool(self.models) and all(m.permanent for m in self.models)
+
+    def corrupt_bits(self, bits, key, dt: float = 1.0):
+        for m, k in zip(self.models, jax.random.split(key, len(self.models))):
+            bits = m.corrupt_bits(bits, k, dt)
+        return bits
+
+    def corrupt_words(self, words, key, dt: float = 1.0):
+        for m, k in zip(self.models, jax.random.split(key, len(self.models))):
+            words = m.corrupt_words(words, k, dt)
+        return words
+
+    def word_mask(self, key, words, dt: float = 1.0):
+        return self.corrupt_words(words, key, dt) ^ words
+
+
+def inject_bit_flips(params: Any, key: jax.Array, p_bit: float) -> Any:
+    """Canonical transient injector: flip each stored bit w.p. p_bit.
+
+    Draw-compatible with the historic `core.reliability.inject_bit_flips`
+    (same per-leaf key split, same Bernoulli plane, same packing).
+    """
+    return TransientBitFlips(p_bit).corrupt(params, key)

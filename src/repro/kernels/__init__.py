@@ -11,6 +11,8 @@ REPRO_PALLAS_INTERPRET=0.
 
 Kernels:
   diag_parity     — rotate-XOR diagonal-parity encode (ECC hot loop, §IV)
+  inject_scrub    — fused fault-inject → encode → syndrome → correct over
+                    the packed arena (Monte-Carlo campaign hot loop, §VI)
   tmr_vote        — per-bit 2-of-3 majority voting (TMR hot loop, §V)
   crossbar_nor    — in-VMEM Min3 netlist interpreter, trials bit-packed in
                     uint32 lanes (the mMPU row-parallelism, §III)

@@ -67,11 +67,15 @@ def _onehot_position(x: jax.Array) -> jax.Array:
     return popcount32(x - jnp.uint32(1))
 
 
-def _scrub_kernel(words_ref, parity_ref, out_w_ref, out_p_ref, stats_ref,
-                  *, slopes: Tuple[int, ...]):
-    w = words_ref[...]                      # (bm, 32) uint32
-    p = parity_ref[...]                     # (bm, F) uint32
+def scrub_body(w: jax.Array, p: jax.Array, slopes: Tuple[int, ...]):
+    """The fused encode→syndrome→locate→correct tile body, shared by the
+    scrub kernel and the fault-campaign inject+scrub kernel
+    (kernels/inject_scrub) so the classification logic has one home.
 
+    w: (bm, 32) data words, p: (bm, F) parity words (both uint32, already
+    in VMEM).  Returns (corrected w, corrected p, data_err, parity_err,
+    uncorrectable) with the last three bool (bm,) block classifications.
+    """
     # encode + syndrome, one fused XOR tree per family
     syn = []
     for f, s in enumerate(slopes):
@@ -104,9 +108,17 @@ def _scrub_kernel(words_ref, parity_ref, out_w_ref, out_p_ref, stats_ref,
     flip_word = jnp.where(data_err, jnp.uint32(1) << j0.astype(jnp.uint32),
                           jnp.uint32(0))
     row = jax.lax.broadcasted_iota(jnp.int32, w.shape, 1) == i0[:, None]
-    out_w_ref[...] = w ^ (row.astype(jnp.uint32) * flip_word[:, None])
-    out_p_ref[...] = p ^ jnp.where(parity_err[:, None] & nonzero, syn,
-                                   jnp.uint32(0))
+    out_w = w ^ (row.astype(jnp.uint32) * flip_word[:, None])
+    out_p = p ^ jnp.where(parity_err[:, None] & nonzero, syn, jnp.uint32(0))
+    return out_w, out_p, data_err, parity_err, uncorrectable
+
+
+def _scrub_kernel(words_ref, parity_ref, out_w_ref, out_p_ref, stats_ref,
+                  *, slopes: Tuple[int, ...]):
+    out_w, out_p, data_err, parity_err, uncorrectable = scrub_body(
+        words_ref[...], parity_ref[...], slopes)
+    out_w_ref[...] = out_w
+    out_p_ref[...] = out_p
     stats_ref[...] = jnp.stack([
         data_err.astype(jnp.int32).sum(),
         parity_err.astype(jnp.int32).sum(),

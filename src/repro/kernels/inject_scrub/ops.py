@@ -1,0 +1,45 @@
+"""Public fused inject+scrub op: pad, tile and dispatch the Pallas kernel.
+
+Takes the flat uint32 arena (core/arena.py), its parity table and an XOR
+fault mask of the same length (sampled by a faults.models.FaultModel), so a
+whole trial interval — corrupt every block, then scrub every block — is ONE
+launch.  Padding blocks carry zero words, zero parity and zero mask: their
+syndrome is identically clean and they contribute nothing to the stats.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import use_interpret
+from .kernel import BLOCK, inject_scrub_kernel
+
+
+def inject_scrub(buf: jax.Array, parity: jax.Array, mask: jax.Array,
+                 slopes: Tuple[int, ...] = (1, 2, -1), block_m: int = 256,
+                 interpret: bool | None = None):
+    """Fused corrupt+scrub of a flat uint32 buffer against its parity table.
+
+    buf, mask: (n_blocks * 32,) uint32; parity: (n_blocks, len(slopes)).
+    Returns (corrected buf, corrected parity, counts) with counts a (4,)
+    int32 vector: injected, corrected, parity_fixed, uncorrectable.
+    """
+    assert buf.ndim == 1 and buf.shape[0] % BLOCK == 0
+    assert mask.shape == buf.shape, (mask.shape, buf.shape)
+    words = buf.reshape(-1, BLOCK)
+    mwords = mask.reshape(-1, BLOCK)
+    n = words.shape[0]
+    assert parity.shape == (n, len(slopes)), (parity.shape, n)
+    if n == 0:
+        return buf, parity, jnp.zeros((4,), jnp.int32)
+    pad = (-n) % block_m if n > block_m else 0
+    if pad:
+        words = jnp.pad(words, ((0, pad), (0, 0)))
+        mwords = jnp.pad(mwords, ((0, pad), (0, 0)))
+        parity = jnp.pad(parity, ((0, pad), (0, 0)))
+    fixed, par2, stats = inject_scrub_kernel(
+        words, parity, mwords, slopes=tuple(slopes), block_m=block_m,
+        interpret=use_interpret() if interpret is None else interpret)
+    return fixed[:n].reshape(-1), par2[:n], stats.sum(axis=0)

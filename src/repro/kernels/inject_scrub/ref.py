@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: inject via XOR, then the reliability-layer scrubber."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core.bitops import popcount32
+from ...core.reliability import WordEccConfig, correct_words
+
+
+def inject_scrub_ref(buf: jax.Array, parity: jax.Array, mask: jax.Array,
+                     slopes: Tuple[int, ...] = (1, 2, -1)):
+    """Oracle for the fused inject+scrub kernel, built on correct_words.
+
+    Same contract as ops.inject_scrub: (buf', parity', counts (4,) int32)
+    with counts = injected, corrected, parity_fixed, uncorrectable.
+    """
+    cfg = WordEccConfig(slopes=slopes)
+    corrupted = buf.reshape(-1) ^ mask.reshape(-1)
+    fixed, par2, rep = correct_words(corrupted, parity, cfg)
+    counts = jnp.stack([popcount32(mask.reshape(-1)).sum(),
+                        rep.corrected, rep.parity_fixed, rep.uncorrectable])
+    return fixed, par2, counts

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config, list_archs
-from ..core.reliability import inject_bit_flips
+from ..faults import (FaultModel, RetentionDrift, StuckAtFaults,
+                      TransientBitFlips)
 from ..kernels.tmr_vote import vote
 from ..models import params as P
 from ..models import transformer as T
@@ -31,6 +32,10 @@ def main() -> None:
     ap.add_argument("--tmr", default="off", choices=["off", "serial", "parallel"])
     ap.add_argument("--inject-p-bit", type=float, default=0.0,
                     help="corrupt each weight bit of each TMR copy w.p. p")
+    ap.add_argument("--fault", default="bitflip",
+                    choices=["bitflip", "stuckat", "drift"],
+                    help="fault model driving the per-copy corruption "
+                         "(repro.faults taxonomy; rate = --inject-p-bit)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -69,12 +74,17 @@ def main() -> None:
         # majority voting on the generated token ids through the Pallas
         # tmr_vote kernel (serial: sequential; parallel: 3 replica groups on
         # a real mesh — same result here)
+        fault: FaultModel = {
+            "bitflip": TransientBitFlips(args.inject_p_bit),
+            "stuckat": StuckAtFaults(args.inject_p_bit / 2,
+                                     args.inject_p_bit / 2),
+            "drift": RetentionDrift(args.inject_p_bit),
+        }[args.fault]
         copies = []
         for i in range(3):
             p = params
             if args.inject_p_bit:
-                p = inject_bit_flips(params, jax.random.fold_in(key, 100 + i),
-                                     args.inject_p_bit)
+                p = fault.corrupt(params, jax.random.fold_in(key, 100 + i))
             copies.append(run_copy(p))
         out = vote(*copies)
     dt = time.time() - t0

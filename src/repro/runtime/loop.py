@@ -26,7 +26,8 @@ import numpy as np
 
 from ..checkpoint import Checkpointer
 from ..core.analytics import ScrubTrajectory
-from ..core.reliability import ReliableStore, WordEccConfig, inject_bit_flips
+from ..core.reliability import ReliableStore, WordEccConfig
+from ..faults.models import FaultModel, TransientBitFlips
 from .monitor import Decision, HeartbeatMonitor, StragglerPolicy
 
 __all__ = ["LoopConfig", "TrainLoop"]
@@ -40,6 +41,8 @@ class LoopConfig:
     log_every: int = 10
     inject_p_bit: float = 0.0     # simulated indirect soft-error rate per scrub interval
     inject_seed: int = 0
+    fault_model: Optional[FaultModel] = None  # overrides inject_p_bit: any
+                                  # repro.faults model drives the injection
     ecc_backend: str = "kernel"   # "kernel" (fused Pallas scrub) or "jnp"
     max_scrub_restores: int = 3   # consecutive ECC restores before giving up
                                   # and continuing with best-effort correction
@@ -88,14 +91,26 @@ class TrainLoop:
     def _corrupt(self, params: Any) -> Any:
         if self.inject_fn is not None:
             return self.inject_fn(params, self.step)
-        if self.cfg.inject_p_bit > 0:
-            # fold the restore count in: real soft errors do not replay, so a
-            # post-restore replay of this step must draw fresh flips (else an
-            # uncorrectable draw would recur identically and livelock the run)
-            key = jax.random.fold_in(
-                jax.random.PRNGKey(self.cfg.inject_seed + self.step),
-                self.total_restores)
-            return inject_bit_flips(params, key, self.cfg.inject_p_bit)
+        model = self.cfg.fault_model
+        if model is None and self.cfg.inject_p_bit > 0:
+            model = TransientBitFlips(self.cfg.inject_p_bit)
+        if model is not None:
+            if model.permanent:
+                # defect maps are device properties: one stable key for the
+                # whole run, or the "permanent" faults would relocate every
+                # scrub interval (and survive restores, correctly)
+                key = jax.random.PRNGKey(self.cfg.inject_seed)
+            else:
+                # fold the restore count in: real soft errors do not replay,
+                # so a post-restore replay of this step must draw fresh flips
+                # (else an uncorrectable draw would recur identically and
+                # livelock the run)
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(self.cfg.inject_seed + self.step),
+                    self.total_restores)
+            # dt=1: one model time unit == one scrub interval (inject_p_bit
+            # has always been a per-scrub-interval rate)
+            return model.corrupt(params, key, dt=1.0)
         return params
 
     def _scrub(self) -> bool:

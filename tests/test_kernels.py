@@ -7,6 +7,7 @@ import pytest
 from repro.core.multpim import multiplier_netlist
 from repro.kernels.diag_parity import (encode_parity, encode_parity_ref,
                                        scrub, scrub_ref)
+from repro.kernels.inject_scrub import inject_scrub, inject_scrub_ref
 from repro.kernels.tmr_vote import vote, vote_ref
 from repro.kernels.crossbar_nor import execute_netlist, execute_netlist_ref
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
@@ -103,10 +104,73 @@ def test_scrub_kernel_mixed_random_sweep():
     _assert_scrub_matches_oracle(bad, bad_par)
 
 
+# --- fused inject+scrub: bit-exact vs the jnp oracle under 0/1/2+ flips ------
+
+def _assert_inject_scrub_matches_oracle(buf, parity, mask):
+    got = inject_scrub(buf, parity, mask)
+    want = inject_scrub_ref(buf, parity, mask)
+    for g, w, name in zip(got, want, ["words", "parity", "counts"]):
+        assert (np.asarray(g) == np.asarray(w)).all(), name
+    return [int(c) for c in got[2]]
+
+
+@pytest.mark.parametrize("n_blocks", [1, 7, 256, 300])
+def test_inject_scrub_zero_mask_is_scrub(n_blocks):
+    """Zero injection: the fused kernel degenerates to the plain scrub."""
+    buf, par = _ecc_case(n_blocks, n_blocks + 1)
+    mask = jnp.zeros_like(buf)
+    counts = _assert_inject_scrub_matches_oracle(buf, par, mask)
+    assert counts == [0, 0, 0, 0]
+    fixed, par2, _ = inject_scrub(buf, par, mask)
+    s_fixed, s_par2, _ = scrub(buf, par)
+    assert (np.asarray(fixed) == np.asarray(s_fixed)).all()
+    assert (np.asarray(par2) == np.asarray(s_par2)).all()
+
+
+@pytest.mark.parametrize("block,word,bit", [(0, 0, 0), (3, 31, 31), (7, 13, 5)])
+def test_inject_scrub_single_flip_corrected(block, word, bit):
+    buf, par = _ecc_case(8, 41)
+    mask = jnp.zeros_like(buf).at[block * 32 + word].set(jnp.uint32(1 << bit))
+    counts = _assert_inject_scrub_matches_oracle(buf, par, mask)
+    assert counts == [1, 1, 0, 0]
+    fixed, _, _ = inject_scrub(buf, par, mask)
+    assert (np.asarray(fixed) == np.asarray(buf)).all()   # healed in-launch
+
+
+@pytest.mark.parametrize("flips", [
+    [(0, 0, 0), (0, 5, 17)],              # 2 flips, different words, same block
+    [(2, 3, 4), (2, 3, 9)],               # 2 flips, same word
+    [(1, 0, 0), (1, 1, 1), (1, 2, 2)],    # 3 flips, one block
+])
+def test_inject_scrub_multi_flip_uncorrectable(flips):
+    buf, par = _ecc_case(4, 43)
+    mask = jnp.zeros_like(buf)
+    for b, w, bit in flips:
+        mask = mask.at[b * 32 + w].set(mask[b * 32 + w] | jnp.uint32(1 << bit))
+    counts = _assert_inject_scrub_matches_oracle(buf, par, mask)
+    assert counts == [len(flips), 0, 0, 1]
+
+
+def test_inject_scrub_random_fault_model_sweep():
+    """Random TransientBitFlips masks across a rate sweep stay bit-exact,
+    and injected counts equal the mask popcount."""
+    from repro.faults import TransientBitFlips
+    buf, par = _ecc_case(64, 47)
+    for i, p in enumerate([1e-4, 1e-3, 1e-2]):
+        key = jax.random.PRNGKey(100 + i)
+        mask = TransientBitFlips(p).word_mask(key, buf)
+        counts = _assert_inject_scrub_matches_oracle(buf, par, mask)
+        n_inj = sum(bin(int(x)).count("1") for x in np.asarray(mask))
+        assert counts[0] == n_inj
+        assert counts[1] + counts[3] <= 64    # <= one event class per block
+
+
 # --- tmr_vote ----------------------------------------------------------------
 
 @pytest.mark.parametrize("shape", [(5,), (33, 7), (4, 3, 17), (128, 512),
                                    (300, 512),      # >256 rows, not a 256-multiple
+                                   (257, 512),      # 256 + 1 rows
+                                   (769, 640),      # odd row count, odd lanes
                                    (50257,)])       # vocab-sized odd leaf
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
 def test_tmr_vote_sweep(shape, dtype):
