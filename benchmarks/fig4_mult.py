@@ -29,19 +29,29 @@ MC_TRIALS = 512
 MC_PGATES = [3e-4, 1e-3, 3e-3]
 
 
-def measure_alpha(n_bits: int = N_BITS) -> float:
+def measure_alpha(n_bits: int = N_BITS, chunk: int = 4096) -> float:
     """Exhaustive single-fault masking: fraction of gate positions whose
-    single fault corrupts the product (averaged over random operands)."""
+    single fault corrupts the product (averaged over random operands).
+
+    One trial per gate position, executed in `chunk`-gate slices: the
+    per-slice working set is chunk x n_wires bits instead of
+    n_gates x n_wires, so 64-bit netlists (~56k gates, ~56k wires) stay
+    within host memory.  The operand stream is drawn up front, so alpha is
+    identical for every chunk size.
+    """
     nl = multpim.multiplier_netlist(n_bits)
     rng = np.random.default_rng(0)
-    a = jnp.array(rng.integers(0, 2**n_bits, nl.n_gates, dtype=np.uint64)
-                  .astype(np.uint32))
-    b = jnp.array(rng.integers(0, 2**n_bits, nl.n_gates, dtype=np.uint64)
-                  .astype(np.uint32))
-    bits = multpim.multiply_bits(a, b, n_bits,
-                                 fault_gate=jnp.arange(nl.n_gates, dtype=jnp.int32))
-    want = multpim.true_product_bits(np.asarray(a), np.asarray(b), n_bits)
-    return float((np.asarray(bits) != want).any(axis=1).mean())
+    a = rng.integers(0, 2**n_bits, nl.n_gates, dtype=np.uint64).astype(np.uint32)
+    b = rng.integers(0, 2**n_bits, nl.n_gates, dtype=np.uint64).astype(np.uint32)
+    want = multpim.true_product_bits(a, b, n_bits)
+    wrong = 0
+    for s in range(0, nl.n_gates, chunk):
+        e = min(s + chunk, nl.n_gates)
+        bits = multpim.multiply_bits(jnp.array(a[s:e]), jnp.array(b[s:e]),
+                                     n_bits,
+                                     fault_gate=jnp.arange(s, e, dtype=jnp.int32))
+        wrong += int((np.asarray(bits) != want[s:e]).any(axis=1).sum())
+    return wrong / nl.n_gates
 
 
 def monte_carlo(p_gate: float, tmr: bool, n_bits: int = N_BITS,
@@ -63,20 +73,20 @@ def run() -> list:
     rows = []
     t0 = time.time()
     nl = multpim.multiplier_netlist(N_BITS)
-    alpha = measure_alpha()
+    alpha = measure_alpha(N_BITS)
     rows.append(("fig4_mult.alpha_unmasked", (time.time() - t0) * 1e6 / nl.n_gates,
                  f"alpha={alpha:.4f} gates={nl.n_gates}"))
 
     # MC validation points (high p_gate)
     for p in MC_PGATES:
         t0 = time.time()
-        mc_base = monte_carlo(p, tmr=False)
+        mc_base = monte_carlo(p, tmr=False, n_bits=N_BITS)
         pred = float(A.p_mult_from_alpha(np.array([p]), alpha, nl.n_gates)[0])
         rows.append((f"fig4_mult.mc_baseline_p{p:g}",
                      (time.time() - t0) * 1e6 / MC_TRIALS,
                      f"measured={mc_base:.4f} predicted={min(pred,1):.4f}"))
     t0 = time.time()
-    mc_tmr = monte_carlo(MC_PGATES[0], tmr=True)
+    mc_tmr = monte_carlo(MC_PGATES[0], tmr=True, n_bits=N_BITS)
     pred_tmr = float(A.p_mult_tmr(np.array([MC_PGATES[0]]), alpha, nl.n_gates)[0])
     rows.append((f"fig4_mult.mc_tmr_p{MC_PGATES[0]:g}",
                  (time.time() - t0) * 1e6 / MC_TRIALS,
@@ -99,5 +109,13 @@ def run() -> list:
 
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-bits", type=int, default=N_BITS,
+                    help="multiplier width (the chunked alpha pass keeps "
+                         "64-bit netlists within host memory)")
+    args = ap.parse_args()
+    N_BITS = args.n_bits
     for name, us, derived in run():
         print(f"{name},{us:.3f},{derived}")

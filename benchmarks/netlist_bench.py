@@ -1,0 +1,119 @@
+"""Netlist execution-engine bench: scan vs levelized vs packed Pallas kernel.
+
+Measures gate-evaluations/second of the three netlist engines
+(core/netlist.execute lax.scan reference, core/scheduler.execute_levelized,
+kernels/netlist_exec one-launch kernel) on the N-bit MultPIM multiplier —
+the hot loop behind fig4_mult, fig4_nn and campaign_mc — plus netlist
+compilation stats: gate count with/without structural-hash CSE, DAG depth,
+schedule levels/width/padding (DESIGN.md §11).
+
+Fault-free and iid-injected variants are timed separately: the injected
+paths share the scan reference's per-gate threefry stream bit-for-bit, so
+their cost includes identical mask sampling and the speedup isolates the
+execution engine.  Smoke mode (REPRO_BENCH_SMOKE=1) shrinks the iteration
+count but keeps the 32-bit / 512-trial headline row so the
+speedup-over-scan measurement stays comparable across CI runs.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+try:                      # package execution: python -m benchmarks.<mod>
+    from . import _path   # noqa: F401
+except ImportError:       # direct script execution
+    import _path          # noqa: F401
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import multpim, scheduler
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+N_BITS = int(os.environ.get("REPRO_NETLIST_BENCH_BITS", "32"))
+TRIALS = 512
+ITERS = 2 if SMOKE else 5
+IMPLS = ("scan", "level", "kernel")
+
+
+def _time(f, *args, iters: int = ITERS) -> float:
+    jax.block_until_ready(f(*args))          # compile + warm
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / iters
+
+
+def _operands(n_bits: int, trials: int):
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 2**n_bits, trials, dtype=np.uint64).astype(np.uint32)
+    b = rng.integers(0, 2**n_bits, trials, dtype=np.uint64).astype(np.uint32)
+    return jnp.array(a), jnp.array(b)
+
+
+def run() -> list:
+    rows = []
+    nl = multpim.multiplier_netlist(N_BITS)
+    nl_raw = multpim.multiplier_netlist(N_BITS, cse=False)
+    sch = scheduler.schedule(nl)
+    tag = f"{N_BITS}b_{TRIALS}t"
+    rows.append((f"netlist.stats_{N_BITS}b", 0.0,
+                 f"gates={nl.n_gates} gates_nocse={nl_raw.n_gates} "
+                 f"cse_saved={nl_raw.n_gates - nl.n_gates} depth={sch.depth} "
+                 f"levels={sch.n_levels} width={sch.max_width} "
+                 f"slots={sch.n_slots} pad_ratio={sch.n_slots / nl.n_gates:.2f}"))
+
+    a, b = _operands(N_BITS, TRIALS)
+    key = jax.random.PRNGKey(1)
+    want = np.asarray(multpim.multiply_bits(a, b, N_BITS, impl="scan"))
+    evals = nl.n_gates * TRIALS
+
+    secs = {}
+    for impl in IMPLS:
+        f = jax.jit(lambda a, b, impl=impl:
+                    multpim.multiply_bits(a, b, N_BITS, impl=impl))
+        got = np.asarray(f(a, b))
+        assert (got == want).all(), f"{impl} diverges from scan"
+        secs[impl] = _time(f, a, b)
+        rows.append((f"netlist.exec_{impl}_{tag}", secs[impl] * 1e6,
+                     f"gate_evals_per_s={evals / secs[impl]:.3e} "
+                     f"speedup_vs_scan={secs['scan'] / secs[impl]:.1f}x"))
+
+    # iid fault injection (p_gate high enough that masks are dense-ish);
+    # streams are bit-identical across engines, so outputs must agree too
+    p = 1e-4
+    want_iid = np.asarray(multpim.multiply_bits(a, b, N_BITS, key=key,
+                                                p_gate=p, impl="scan"))
+    secs_iid = {}
+    for impl in IMPLS:
+        f = jax.jit(lambda a, b, k, impl=impl:
+                    multpim.multiply_bits(a, b, N_BITS, key=k, p_gate=p,
+                                          impl=impl))
+        got = np.asarray(f(a, b, key))
+        assert (got == want_iid).all(), f"{impl} iid stream diverges from scan"
+        secs_iid[impl] = _time(f, a, b, key)
+        rows.append((f"netlist.exec_iid_{impl}_{tag}", secs_iid[impl] * 1e6,
+                     f"gate_evals_per_s={evals / secs_iid[impl]:.3e} "
+                     f"speedup_vs_scan={secs_iid['scan'] / secs_iid[impl]:.1f}x"))
+
+    best = min(secs, key=secs.get)
+    rows.append((f"netlist.best_speedup_{tag}", 0.0,
+                 f"impl={best} speedup_vs_scan="
+                 f"{secs['scan'] / secs[best]:.1f}x "
+                 f"gate_evals_per_s={evals / secs[best]:.3e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-bits", type=int, default=N_BITS,
+                    help="multiplier width")
+    ap.add_argument("--trials", type=int, default=TRIALS,
+                    help="batched multiplications per timed call")
+    args = ap.parse_args()
+    N_BITS, TRIALS = args.n_bits, args.trials
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived}")

@@ -21,7 +21,7 @@ except ImportError:       # direct script execution
     import _path          # noqa: F401
 
 MODULES = ["fig4_mult", "fig4_nn", "fig5_weights", "ecc_overhead",
-           "tmr_tradeoff", "kernels_bench", "campaign_mc"]
+           "tmr_tradeoff", "kernels_bench", "campaign_mc", "netlist_bench"]
 
 
 def main() -> None:

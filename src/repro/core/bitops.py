@@ -13,6 +13,8 @@ import jax.numpy as jnp
 __all__ = [
     "to_bits",
     "from_bits",
+    "pack_trials",
+    "unpack_trials",
     "rotl32",
     "rotr32",
     "popcount32",
@@ -20,6 +22,9 @@ __all__ = [
     "float_view_u32",
     "u32_view_float",
 ]
+
+#: trials packed per uint32 lane word (the crossbar row-parallel axis)
+PACK = 32
 
 
 def to_bits(x: jax.Array, width: int) -> jax.Array:
@@ -39,6 +44,32 @@ def from_bits(bits: jax.Array, dtype=jnp.uint32) -> jax.Array:
     shifts = jnp.arange(width, dtype=acc_dtype)
     vals = (bits.astype(acc_dtype) << shifts).sum(axis=-1, dtype=acc_dtype)
     return vals.astype(dtype)
+
+
+def pack_trials(bits: jax.Array) -> jax.Array:
+    """Pack the leading *trials* axis 32-per-uint32 word, trial-major.
+
+    bits: bool (trials, ...)  ->  uint32 (ceil(trials/32), ...) with trial t
+    in bit t % 32 of word t // 32 (zero-padded — padding lanes carry 0).
+    This is the packed-state layout of the netlist execution engines
+    (core/scheduler.py, kernels/netlist_exec, kernels/crossbar_nor).
+    """
+    t = bits.shape[0]
+    pad = (-t) % PACK
+    if pad:
+        bits = jnp.pad(bits, ((0, pad),) + ((0, 0),) * (bits.ndim - 1))
+    bits = bits.reshape((-1, PACK) + bits.shape[1:]).astype(jnp.uint32)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32).reshape(
+        (1, PACK) + (1,) * (bits.ndim - 2))
+    return (bits << shifts).sum(axis=1, dtype=jnp.uint32)
+
+
+def unpack_trials(words: jax.Array, trials: int) -> jax.Array:
+    """Inverse of pack_trials: uint32 (tw, ...) -> bool (trials, ...)."""
+    shifts = jnp.arange(PACK, dtype=jnp.uint32).reshape(
+        (1, PACK) + (1,) * (words.ndim - 1))
+    bits = ((words[:, None] >> shifts) & 1).astype(jnp.bool_)
+    return bits.reshape((-1,) + words.shape[1:])[:trials]
 
 
 def rotl32(x: jax.Array, r) -> jax.Array:

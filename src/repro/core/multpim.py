@@ -15,27 +15,56 @@ voting").
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from . import scheduler
 from .bitops import from_bits, to_bits
 from .netlist import Netlist, NetlistBuilder, execute, full_adder
 from .stateful_logic import g_maj3
 
 __all__ = ["multiplier_netlist", "multiply_bits", "multiply_words",
-           "multiply_tmr_bits", "true_product_bits"]
+           "multiply_tmr_bits", "true_product_bits", "execute_netlist"]
+
+#: netlist execution engine: "scan" (lax.scan over gates — the reference),
+#: "level" (levelized bit-packed jnp, core/scheduler.py — default) or
+#: "kernel" (one Pallas launch, kernels/netlist_exec).  All three are
+#: bit-exact to each other, fault streams included.
+DEFAULT_IMPL = os.environ.get("REPRO_NETLIST_IMPL", "level")
+
+
+def execute_netlist(nl: Netlist, inputs: jax.Array,
+                    key: Optional[jax.Array] = None, p_gate=0.0,
+                    fault_gate: Optional[jax.Array] = None,
+                    impl: Optional[str] = None) -> jax.Array:
+    """Dispatch a netlist execution to the selected engine."""
+    impl = impl or DEFAULT_IMPL
+    if impl == "scan":
+        return execute(nl, inputs, key=key, p_gate=p_gate,
+                       fault_gate=fault_gate)
+    if impl == "level":
+        return scheduler.execute_levelized(nl, inputs, key=key, p_gate=p_gate,
+                                           fault_gate=fault_gate)
+    if impl == "kernel":
+        from ..kernels.netlist_exec import execute_packed
+        return execute_packed(nl, inputs, key=key, p_gate=p_gate,
+                              fault_gate=fault_gate)
+    raise ValueError(f"unknown netlist impl {impl!r} "
+                     "(expected scan | level | kernel)")
 
 
 @functools.lru_cache(maxsize=None)
-def multiplier_netlist(n_bits: int) -> Netlist:
+def multiplier_netlist(n_bits: int, cse: bool = True) -> Netlist:
     """Build the N-bit unsigned multiplier netlist (cached per width).
 
     Inputs: a[0..N-1] LSB-first, then b[0..N-1].  Outputs: product, 2N bits
-    LSB-first.
+    LSB-first.  cse=False keeps structurally duplicate gates (the honest
+    hand-mapped micro-code count, used to measure the CSE reduction).
     """
-    bld = NetlistBuilder()
+    bld = NetlistBuilder(cse=cse)
     a = bld.input_bits(n_bits)
     b = bld.input_bits(n_bits)
 
@@ -73,31 +102,37 @@ def _pack_inputs(a_words: jax.Array, b_words: jax.Array, n_bits: int) -> jax.Arr
 
 
 def multiply_bits(a_words: jax.Array, b_words: jax.Array, n_bits: int,
-                  key: Optional[jax.Array] = None, p_gate: float = 0.0,
-                  fault_gate: Optional[jax.Array] = None) -> jax.Array:
+                  key: Optional[jax.Array] = None, p_gate=0.0,
+                  fault_gate: Optional[jax.Array] = None,
+                  impl: Optional[str] = None) -> jax.Array:
     """Multiply batches of N-bit words through the in-memory netlist.
 
-    Returns the 2N-bit product as a bool bit-plane (trials, 2N), LSB first —
-    bit-exact regardless of x64 mode.
+    p_gate may be a float rate or any faults.FaultModel; impl selects the
+    execution engine (see DEFAULT_IMPL) — the result is bit-exact across
+    engines.  Returns the 2N-bit product as a bool bit-plane (trials, 2N),
+    LSB first — bit-exact regardless of x64 mode.
     """
     nl = multiplier_netlist(n_bits)
-    return execute(nl, _pack_inputs(a_words, b_words, n_bits),
-                   key=key, p_gate=p_gate, fault_gate=fault_gate)
+    return execute_netlist(nl, _pack_inputs(a_words, b_words, n_bits),
+                           key=key, p_gate=p_gate, fault_gate=fault_gate,
+                           impl=impl)
 
 
 def multiply_words(a_words: jax.Array, b_words: jax.Array, n_bits: int,
-                   key: Optional[jax.Array] = None, p_gate: float = 0.0,
-                   fault_gate: Optional[jax.Array] = None) -> jax.Array:
+                   key: Optional[jax.Array] = None, p_gate=0.0,
+                   fault_gate: Optional[jax.Array] = None,
+                   impl: Optional[str] = None) -> jax.Array:
     """As multiply_bits but packed to (trials, 2) uint32 words (lo, hi)."""
-    bits = multiply_bits(a_words, b_words, n_bits, key, p_gate, fault_gate)
+    bits = multiply_bits(a_words, b_words, n_bits, key, p_gate, fault_gate,
+                         impl=impl)
     lo = from_bits(bits[..., :n_bits], jnp.uint32)
     hi = from_bits(bits[..., n_bits:], jnp.uint32)
     return jnp.stack([lo, hi], axis=-1)
 
 
 def multiply_tmr_bits(a_words: jax.Array, b_words: jax.Array, n_bits: int,
-                      key: jax.Array, p_gate: float,
-                      ideal_voting: bool = False) -> jax.Array:
+                      key: jax.Array, p_gate, ideal_voting: bool = False,
+                      impl: Optional[str] = None) -> jax.Array:
     """TMR multiplication (serial discipline): three netlist executions with
     independent fault streams, then per-bit Minority3+NOT voting.
 
@@ -108,9 +143,9 @@ def multiply_tmr_bits(a_words: jax.Array, b_words: jax.Array, n_bits: int,
     nl = multiplier_netlist(n_bits)
     inputs = _pack_inputs(a_words, b_words, n_bits)
     k1, k2, k3, kv = jax.random.split(key, 4)
-    o1 = execute(nl, inputs, key=k1, p_gate=p_gate)
-    o2 = execute(nl, inputs, key=k2, p_gate=p_gate)
-    o3 = execute(nl, inputs, key=k3, p_gate=p_gate)
+    o1 = execute_netlist(nl, inputs, key=k1, p_gate=p_gate, impl=impl)
+    o2 = execute_netlist(nl, inputs, key=k2, p_gate=p_gate, impl=impl)
+    o3 = execute_netlist(nl, inputs, key=k3, p_gate=p_gate, impl=impl)
     if ideal_voting:
         return g_maj3(o1, o2, o3)
     return g_maj3(o1, o2, o3, kv, p_gate)

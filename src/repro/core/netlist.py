@@ -18,11 +18,13 @@ Execution is vectorized over trials (= crossbar row parallelism) with
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..faults.models import FaultModel
 
 __all__ = ["Netlist", "NetlistBuilder", "execute", "full_adder"]
 
@@ -40,17 +42,26 @@ class Netlist:
 
 
 class NetlistBuilder:
-    """Builds Min3 netlists with constant folding and duplicate-input
-    simplification (keeps the gate count honest vs. hand-mapped micro-code)."""
+    """Builds Min3 netlists with constant folding, duplicate-input
+    simplification and structural-hash CSE (keeps the gate count honest vs.
+    hand-mapped micro-code).
+
+    CSE: Min3 is symmetric and every gate is pure SSA (each output is a
+    fresh wire computed only from earlier wires), so two gates with the
+    same *sorted* input triple always carry the same value — the second
+    emission returns the first gate's output wire instead of a new gate.
+    Pass cse=False to keep duplicates (e.g. to measure the reduction).
+    """
 
     ZERO = 0
     ONE = 1
 
-    def __init__(self):
+    def __init__(self, cse: bool = True):
         self._n = 2                    # wires 0/1 are constants
         self._gates: List[tuple] = []
         self._inputs: List[int] = []
         self._outputs: List[int] = []
+        self._cse: Optional[Dict[Tuple[int, int, int], int]] = {} if cse else None
 
     # -- wires ---------------------------------------------------------------
     def input_bits(self, n: int) -> List[int]:
@@ -63,9 +74,16 @@ class NetlistBuilder:
         self._outputs.extend(int(w) for w in wires)
 
     def _emit(self, a: int, b: int, c: int) -> int:
+        if self._cse is not None:
+            key = tuple(sorted((a, b, c)))
+            hit = self._cse.get(key)
+            if hit is not None:
+                return hit
         out = self._n
         self._n += 1
         self._gates.append((a, b, c, out))
+        if self._cse is not None:
+            self._cse[key] = out
         return out
 
     # -- primitive: Minority3 with folding -------------------------------------
@@ -174,16 +192,20 @@ def full_adder(bld: NetlistBuilder, a: int, b: int, c: int):
 
 
 def execute(nl: Netlist, inputs: jax.Array,
-            key: Optional[jax.Array] = None, p_gate: float = 0.0,
+            key: Optional[jax.Array] = None, p_gate=0.0,
             fault_gate: Optional[jax.Array] = None) -> jax.Array:
-    """Run the netlist on a batch of input vectors.
+    """Run the netlist on a batch of input vectors (reference lax.scan path).
 
     inputs:     bool (trials, n_in)
-    key/p_gate: iid per-gate fault injection
+    key/p_gate: iid per-gate fault injection; p_gate may also be any
+                faults.FaultModel (matching stateful_logic.maybe_flip) —
+                gate gid's output is corrupted under fold_in(key, gid)
     fault_gate: int32 (trials,) — trial t flips exactly gate fault_gate[t]
                 (exhaustive single-fault analysis); -1 disables for a trial.
 
-    Returns bool (trials, n_out).
+    Returns bool (trials, n_out).  The levelized engines
+    (core/scheduler.py, kernels/netlist_exec) are bit-exact against this
+    path, fault streams included.
     """
     trials = inputs.shape[0]
     state = jnp.zeros((trials, nl.n_wires), jnp.bool_)
@@ -193,7 +215,8 @@ def execute(nl: Netlist, inputs: jax.Array,
     gates = jnp.asarray(nl.gates)                       # (G, 4)
     gate_ids = jnp.arange(nl.n_gates, dtype=jnp.int32)
 
-    use_iid = key is not None and p_gate > 0.0
+    is_model = isinstance(p_gate, FaultModel)
+    use_iid = key is not None and (is_model or p_gate > 0.0)
     use_single = fault_gate is not None
 
     def step(state, xs):
@@ -205,8 +228,12 @@ def execute(nl: Netlist, inputs: jax.Array,
         maj = (a & b) | (b & c) | (a & c)
         val = jnp.logical_not(maj)
         if use_iid:
-            flips = jax.random.bernoulli(jax.random.fold_in(key, gid), p_gate, (trials,))
-            val = jnp.logical_xor(val, flips)
+            gk = jax.random.fold_in(key, gid)
+            if is_model:
+                val = p_gate.corrupt_bits(val, gk)
+            else:
+                val = jnp.logical_xor(
+                    val, jax.random.bernoulli(gk, p_gate, (trials,)))
         if use_single:
             val = jnp.logical_xor(val, fault_gate == gid)
         state = jax.lax.dynamic_update_index_in_dim(state, val, out, axis=1)

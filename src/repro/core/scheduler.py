@@ -1,0 +1,337 @@
+"""Levelized netlist schedules: O(depth) wide steps instead of O(G) gates.
+
+The lax.scan executor in core/netlist.py walks the gate list one Min3 at a
+time — serial in the gate dimension, the opposite of the crossbar row
+parallelism the mMPU exploits.  But a Min3 netlist is a DAG: every gate
+whose inputs are already computed can fire in the same cycle (HIPE-MAGIC's
+level scheduling, PAPERS.md).  This module compiles a `Netlist` into a
+dense, padded ``(L, W, 4)`` schedule of dependency levels and executes it
+as L wide vector steps over *trial-packed* words (32 trials per uint32
+lane, core/bitops.pack_trials), so each level is a handful of bitwise ops.
+
+Two compilation decisions carry the speedup:
+
+* **capacity-capped levels** — raw ASAP levelization of the multiplier is
+  two 1024-wide partial-product levels followed by hundreds of ~45-wide
+  adder levels; padding every level to the global maximum would waste ~20x
+  the work.  Capacity-constrained list scheduling (default width: a power
+  of two near 2·G/depth) spills wide levels into their successors' slack;
+  every gate still executes strictly after its producers.
+* **schedule-order wire renumbering** — wires are renamed so that level
+  l's outputs occupy one contiguous row block of the packed state
+  ``[base + l·W, base + (l+1)·W)``.  A level then commits with one
+  dynamic_update_slice instead of a scattered column write (~5x on CPU;
+  on TPU a lane-contiguous store instead of a scatter), while reads stay
+  gathers over earlier rows.  Padding slots read row 0 (const ZERO) and
+  own their slot's row, so no trash-wire aliasing exists anywhere.
+
+Fault injection matches the scan reference bit-for-bit: gate ``gid`` is
+corrupted under ``fold_in(key, gid)`` via the faults.FaultModel
+packed-trial samplers (``gate_lane_masks``), and single-fault planes
+(`fault_gate`) XOR the same positions.  The Pallas kernel in
+kernels/netlist_exec consumes the same schedule and the same mask tensors,
+which makes kernel ≡ levelized ≡ scan an exact identity, fault streams
+included (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..faults.models import FaultModel, TransientGateFaults
+from .bitops import PACK, pack_trials, unpack_trials
+from .netlist import Netlist
+
+__all__ = ["Schedule", "levelize", "schedule", "schedule_fault_masks",
+           "min3_level", "packed_initial_state", "execute_levelized"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Dense levelized form of a Netlist.
+
+    sched:     (L, W, 4) int32 — Min3 rows (in1, in2, in3, out) grouped by
+               level, in *original wire ids* (padding slots read wire 0 and
+               carry out = n_wires).
+    sched_gid: (L, W) int32 — original gate id per slot, -1 for padding
+               (the key into gate-indexed fault-mask tensors).
+    widths:    (L,) int32 — real gates per level.
+    depth:     critical-path depth of the DAG (ASAP level count); L >= depth
+               when the width cap forces spilling.
+    remap:     (n_wires,) int32 — wire id -> packed state row: row 0 ZERO,
+               row 1 ONE, rows [2, base) the primary inputs in netlist
+               order, then slot (l, s) owns row base + l*W + s.
+    rows_in:   (L, W, 3) int32 — sched input wires through remap (padding
+               slots read row 0); level l's outputs are exactly rows
+               [base + l*W, base + (l+1)*W) of the packed state.
+    """
+
+    n_wires: int
+    n_gates: int
+    depth: int
+    sched: np.ndarray
+    sched_gid: np.ndarray
+    widths: np.ndarray
+    base: int
+    remap: np.ndarray
+    rows_in: np.ndarray
+
+    @property
+    def n_levels(self) -> int:
+        return int(self.sched.shape[0])
+
+    @property
+    def max_width(self) -> int:
+        return int(self.sched.shape[1])
+
+    @property
+    def n_slots(self) -> int:
+        return int(self.sched.shape[0] * self.sched.shape[1])
+
+    @property
+    def n_rows(self) -> int:
+        return self.base + self.n_slots
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (int(n) - 1)).bit_length()
+
+
+def _asap_levels(nl: Netlist) -> np.ndarray:
+    """ASAP level per gate (1-based; constants/inputs sit at level 0)."""
+    wire_level = np.zeros(nl.n_wires, np.int64)
+    gate_level = np.zeros(nl.n_gates, np.int64)
+    for g in range(nl.n_gates):
+        i1, i2, i3, out = nl.gates[g]
+        lvl = 1 + max(wire_level[i1], wire_level[i2], wire_level[i3])
+        gate_level[g] = lvl
+        wire_level[out] = lvl
+    return gate_level
+
+
+def levelize(nl: Netlist, max_width: Optional[int] = None) -> Schedule:
+    """Compile a netlist into a capacity-capped levelized schedule.
+
+    Capacity-constrained list scheduling: at each step, fire up to
+    ``max_width`` ready gates (all producers in strictly earlier steps),
+    lowest gate id first — deterministic, and id order is the builder's
+    emission order so locality of the wire state is preserved.
+    ``max_width=None`` picks a power of two near 2·G/depth (clamped to
+    [32, ASAP max width]) — wide enough that spilling adds few levels,
+    narrow enough that padding stays O(G).
+    """
+    G = nl.n_gates
+    n_in = len(nl.inputs)
+    base = 2 + n_in
+    remap = np.zeros(nl.n_wires, np.int64)
+    remap[1] = 1
+    remap[nl.inputs] = 2 + np.arange(n_in)
+    if G == 0:
+        return Schedule(nl.n_wires, 0, 0, np.zeros((0, 1, 4), np.int32),
+                        np.full((0, 1), -1, np.int32), np.zeros(0, np.int32),
+                        base, remap.astype(np.int32),
+                        np.zeros((0, 1, 3), np.int32))
+
+    asap = _asap_levels(nl)
+    depth = int(asap.max())
+    if max_width is None:
+        _, counts = np.unique(asap, return_counts=True)
+        width_asap = int(counts.max())
+        max_width = min(width_asap, max(32, _next_pow2(-(-2 * G // depth))))
+    max_width = max(1, int(max_width))
+
+    # producer gate of each wire (-1 for constants and primary inputs)
+    producer = np.full(nl.n_wires, -1, np.int64)
+    producer[nl.gates[:, 3]] = np.arange(G)
+    pred = producer[nl.gates[:, :3]]                    # (G, 3), -1 = source
+    indeg = (pred >= 0).sum(axis=1)
+    # consumers adjacency (flat CSR to keep the python loop cheap)
+    src = pred[pred >= 0]
+    dst = np.repeat(np.arange(G), 3)[(pred >= 0).reshape(-1)]
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    starts = np.searchsorted(src, np.arange(G + 1))
+
+    future: list = [(1, g) for g in range(G) if indeg[g] == 0]
+    heapq.heapify(future)
+    ready: list = []
+    levels: list = []
+    scheduled = 0
+    step = 0
+    while scheduled < G:
+        step += 1
+        if not ready and future and future[0][0] > step:
+            step = future[0][0]
+        while future and future[0][0] <= step:
+            heapq.heappush(ready, heapq.heappop(future)[1])
+        level = []
+        while ready and len(level) < max_width:
+            level.append(heapq.heappop(ready))
+        for g in level:
+            for consumer in dst[starts[g]:starts[g + 1]]:
+                indeg[consumer] -= 1
+                if indeg[consumer] == 0:
+                    heapq.heappush(future, (step + 1, consumer))
+        scheduled += len(level)
+        levels.append(level)
+
+    L, W = len(levels), max_width
+    sched = np.zeros((L, W, 4), np.int32)
+    sched[:, :, 3] = nl.n_wires
+    sched_gid = np.full((L, W), -1, np.int32)
+    widths = np.zeros(L, np.int32)
+    for l, level in enumerate(levels):
+        widths[l] = len(level)
+        sched[l, :len(level)] = nl.gates[level]
+        sched_gid[l, :len(level)] = level
+
+    valid = sched_gid >= 0
+    slot_row = base + np.arange(L * W).reshape(L, W)
+    remap[nl.gates[sched_gid[valid], 3]] = slot_row[valid]
+    rows_in = np.where(valid[..., None], remap[sched[:, :, :3]], 0)
+    return Schedule(nl.n_wires, G, depth, sched, sched_gid, widths,
+                    base, remap.astype(np.int32), rows_in.astype(np.int32))
+
+
+_schedule_cache: Dict[tuple, Schedule] = {}
+
+
+def schedule(nl: Netlist, max_width: Optional[int] = None) -> Schedule:
+    """Cached levelize — netlists are built once and executed many times.
+
+    Keyed on the netlist's exact bytes (a handful of netlists per process,
+    ~200 KB each — collisions would silently execute the wrong schedule,
+    so no hashing shortcut)."""
+    key = (nl.n_wires, np.ascontiguousarray(nl.gates).tobytes(),
+           np.ascontiguousarray(nl.inputs).tobytes(),
+           np.ascontiguousarray(nl.outputs).tobytes(), max_width)
+    sch = _schedule_cache.get(key)
+    if sch is None:
+        sch = _schedule_cache[key] = levelize(nl, max_width)
+    return sch
+
+
+def schedule_fault_masks(sch: Schedule, trials: int,
+                         key: Optional[jax.Array] = None, p_gate=0.0,
+                         fault_gate: Optional[jax.Array] = None,
+                         ) -> Optional[Tuple[Optional[jax.Array], jax.Array]]:
+    """Build schedule-ordered corruption masks, or None when fault-free.
+
+    Returns (keep, flip) with flip uint32 (L, W, tw), tw = ceil(trials/32):
+    slot (l, s)'s freshly computed packed column corrupts as
+    ``(val & keep[l, s]) ^ flip[l, s]`` — identity on padding slots.  keep
+    is None when no iid model is active (single-fault only): the
+    corruption is then a pure XOR and the engines skip the AND — the
+    exhaustive alpha path never materializes G x tw words of constant
+    ones.  Gate gid samples under fold_in(key, gid) exactly like the scan
+    reference; a float p_gate means TransientGateFaults(p_gate); the iid
+    model is applied before the single-fault XOR (scan order), which in
+    affine form is just flip ^= single_fault_plane.
+    """
+    G, tw = sch.n_gates, -(-trials // PACK)
+    model = p_gate if isinstance(p_gate, FaultModel) else (
+        TransientGateFaults(p_gate) if p_gate > 0.0 else None)
+    use_iid = key is not None and model is not None
+    if not use_iid and fault_gate is None:
+        return None
+
+    if use_iid:
+        gids = jnp.arange(G, dtype=jnp.int32)
+        keys = jax.vmap(lambda g: jax.random.fold_in(key, g))(gids)
+        keep_g, flip_g = jax.vmap(
+            lambda k: model.gate_lane_masks(k, trials))(keys)      # (G, tw)
+    else:
+        keep_g = None
+        flip_g = jnp.zeros((G, tw), jnp.uint32)
+
+    if fault_gate is not None:
+        # trial t flips gate fault_gate[t]: scatter bit t%32 into word t//32
+        # of that gate's row (distinct bits per trial — adds never collide);
+        # negative fault_gate disables by landing in the spare row G
+        t = jnp.arange(trials, dtype=jnp.uint32)
+        fg = jnp.where(fault_gate < 0, G, fault_gate).astype(jnp.int32)
+        single = jnp.zeros((G + 1, tw), jnp.uint32)
+        single = single.at[fg, (t // PACK).astype(jnp.int32)].add(
+            jnp.uint32(1) << (t % PACK), mode="drop")
+        flip_g = flip_g ^ single[:G]
+
+    gid = jnp.asarray(sch.sched_gid)                               # (L, W)
+    pad = (gid < 0)[..., None]
+    safe = jnp.maximum(gid, 0)
+    flip = jnp.where(pad, jnp.uint32(0), flip_g[safe])
+    if keep_g is None:
+        return None, flip
+    keep = jnp.where(pad, jnp.uint32(0xFFFFFFFF), keep_g[safe])
+    return keep, flip
+
+
+def min3_level(state: jax.Array, rows: jax.Array) -> jax.Array:
+    """Evaluate one schedule level: (n_rows, tw) packed state + (W, 3) input
+    rows -> (W, tw) Minority3 outputs.  One fused gather per level — a
+    (W, 3, tw) single XLA gather is ~4x a triple of (W, tw) gathers on CPU.
+    Shared by execute_levelized and the netlist_exec kernel body, so the
+    kernel == level bit-identity rests on literally the same expression."""
+    abc = state[rows]
+    a, b, c = abc[:, 0], abc[:, 1], abc[:, 2]
+    return ~((a & b) | (b & c) | (a & c))
+
+
+def packed_initial_state(sch: Schedule, inputs: jax.Array) -> jax.Array:
+    """(trials, n_in) bool -> (n_rows, tw) uint32 packed wire state in the
+    schedule's renumbered row layout (constants + inputs loaded in netlist
+    input order — rows [2, base) — every level's output block zeroed)."""
+    tw = -(-inputs.shape[0] // PACK)
+    state = jnp.zeros((sch.n_rows, tw), jnp.uint32)
+    state = state.at[1].set(jnp.uint32(0xFFFFFFFF))
+    return state.at[2:sch.base].set(pack_trials(inputs).T)
+
+
+def execute_levelized(nl: Netlist, inputs: jax.Array,
+                      key: Optional[jax.Array] = None, p_gate=0.0,
+                      fault_gate: Optional[jax.Array] = None,
+                      max_width: Optional[int] = None,
+                      unroll: int = 4) -> jax.Array:
+    """Levelized bit-packed executor — same contract as netlist.execute,
+    bit-exact against it (fault streams included), O(L) steps instead of
+    O(G).  This is also the jnp oracle for kernels/netlist_exec.
+    """
+    sch = schedule(nl, max_width)
+    trials = inputs.shape[0]
+    state = packed_initial_state(sch, inputs)
+    masks = schedule_fault_masks(sch, trials, key, p_gate, fault_gate)
+    rows_in = jnp.asarray(sch.rows_in)
+    offsets = sch.base + sch.max_width * jnp.arange(max(sch.n_levels, 1),
+                                                    dtype=jnp.int32)
+    offsets = offsets[:sch.n_levels]
+    zero = jnp.int32(0)
+
+    if masks is None:
+        def body(state, xs):
+            rows, off = xs
+            val = min3_level(state, rows)
+            return jax.lax.dynamic_update_slice(state, val, (off, zero)), None
+
+        state, _ = jax.lax.scan(body, state, (rows_in, offsets), unroll=unroll)
+    elif masks[0] is None:                           # single-fault: pure XOR
+        def body(state, xs):
+            rows, off, flip = xs
+            val = min3_level(state, rows) ^ flip
+            return jax.lax.dynamic_update_slice(state, val, (off, zero)), None
+
+        state, _ = jax.lax.scan(body, state, (rows_in, offsets, masks[1]),
+                                unroll=unroll)
+    else:
+        def body(state, xs):
+            rows, off, keep, flip = xs
+            val = (min3_level(state, rows) & keep) ^ flip
+            return jax.lax.dynamic_update_slice(state, val, (off, zero)), None
+
+        state, _ = jax.lax.scan(body, state, (rows_in, offsets) + masks,
+                                unroll=unroll)
+    out = state[jnp.asarray(sch.remap[np.asarray(nl.outputs)])]
+    return unpack_trials(out.T, trials)

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import arena
+from ..core.bitops import PACK, pack_trials
 
 __all__ = ["FaultModel", "TransientBitFlips", "TransientGateFaults",
            "StuckAtFaults", "RetentionDrift", "CompositeFault",
@@ -90,6 +91,23 @@ class FaultModel:
     def corrupt_words(self, words: jax.Array, key: jax.Array,
                       dt: float = 1.0) -> jax.Array:
         return words ^ self.word_mask(key, words, dt)
+
+    # -- packed-trial surface (netlist execution engines) ----------------------
+    def gate_lane_masks(self, key: jax.Array, trials: int,
+                        dt: float = 1.0) -> Tuple[jax.Array, jax.Array]:
+        """Per-gate corruption as lane masks over trial-packed words.
+
+        Any single-bit boolean corruption is affine per lane, so one gate's
+        output column packed 32-trials-per-word (core/bitops.pack_trials
+        layout) corrupts as ``(val & keep) ^ flip``.  Returns
+        (keep, flip) uint32 (ceil(trials/32),), bit-exact against
+        ``corrupt_bits`` on the unpacked (trials,) plane under the same key
+        — the levelized/kernel netlist engines stay stream-identical to the
+        lax.scan reference.  Padding lanes are don't-care (their trials are
+        discarded on unpack).
+        """
+        flip = pack_trials(self.bit_flips(key, (trials,), dt))
+        return jnp.full_like(flip, jnp.uint32(0xFFFFFFFF)), flip
 
     # -- pytree surface -------------------------------------------------------
     def corrupt(self, params: Any, key: jax.Array, dt: float = 1.0) -> Any:
@@ -159,6 +177,12 @@ class StuckAtFaults(FaultModel):
         sa0w, sa1w = pack_flip_mask(sa0), pack_flip_mask(sa1)
         return (words & sa0w) | (~words & sa1w)
 
+    def gate_lane_masks(self, key, trials: int, dt: float = 1.0):
+        # (v & ~sa0) | sa1 == (v & ~(sa0|sa1)) ^ sa1 — sa0/sa1 are disjoint
+        sa0, sa1 = self.stuck_masks(key, (trials,))
+        sa1w = pack_trials(sa1)
+        return ~(pack_trials(sa0) | sa1w), sa1w
+
 
 @dataclasses.dataclass(frozen=True)
 class RetentionDrift(FaultModel):
@@ -195,6 +219,18 @@ class CompositeFault(FaultModel):
 
     def word_mask(self, key, words, dt: float = 1.0):
         return self.corrupt_words(words, key, dt) ^ words
+
+    def gate_lane_masks(self, key, trials: int, dt: float = 1.0):
+        # lanewise affine composition: f2(f1(v)) with f = (v & K) ^ F gives
+        # K = K1 & K2, F = (F1 & K2) ^ F2 — same member order and key split
+        # as corrupt_bits, so the packed stream matches the scan reference.
+        keep = jnp.full((-(-trials // PACK),), 0xFFFFFFFF, jnp.uint32)
+        flip = jnp.zeros_like(keep)
+        for m, k in zip(self.models, jax.random.split(key, len(self.models))):
+            k2, f2 = m.gate_lane_masks(k, trials, dt)
+            keep = keep & k2
+            flip = (flip & k2) ^ f2
+        return keep, flip
 
 
 def inject_bit_flips(params: Any, key: jax.Array, p_bit: float) -> Any:

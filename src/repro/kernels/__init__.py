@@ -15,7 +15,12 @@ Kernels:
                     the packed arena (Monte-Carlo campaign hot loop, §VI)
   tmr_vote        — per-bit 2-of-3 majority voting (TMR hot loop, §V)
   crossbar_nor    — in-VMEM Min3 netlist interpreter, trials bit-packed in
-                    uint32 lanes (the mMPU row-parallelism, §III)
+                    uint32 lanes (the mMPU row-parallelism, §III); serial
+                    in the gate dimension, fault-free only
+  netlist_exec    — levelized netlist executor over the (L, W, 4) schedule
+                    of core/scheduler.py: O(depth) wide steps, packed wire
+                    state VMEM-resident across all levels, mask-based fault
+                    injection bit-exact vs the scan reference (§VI-A)
   flash_attention — online-softmax blocked attention (model hot loop)
 """
 import os

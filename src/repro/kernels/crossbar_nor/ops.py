@@ -1,44 +1,27 @@
-"""Public netlist-execution op: packs boolean trials into uint32 lanes,
-initializes constant/input wires, runs the VMEM interpreter kernel."""
+"""Public netlist-execution op: packs boolean trials into uint32 lanes
+(core/bitops.pack_trials layout), initializes constant/input wires, runs
+the VMEM interpreter kernel.  Gate-serial and fault-free — the levelized
+kernels/netlist_exec engine supersedes it for the experiment hot loops."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from .. import use_interpret
+from ...core.bitops import PACK, pack_trials, unpack_trials
 from ...core.netlist import Netlist
 from .kernel import netlist_kernel
-
-PACK = 32
-
-
-def _pack_bits(x: jax.Array) -> jax.Array:
-    """(trials, n) bool -> (ceil(trials/32), n) uint32, trial t in bit t%32."""
-    t, n = x.shape
-    pad = (-t) % PACK
-    if pad:
-        x = jnp.pad(x, ((0, pad), (0, 0)))
-    x = x.reshape(-1, PACK, n).astype(jnp.uint32)
-    shifts = jnp.arange(PACK, dtype=jnp.uint32)[None, :, None]
-    return (x << shifts).sum(axis=1, dtype=jnp.uint32)
-
-
-def _unpack_bits(w: jax.Array, trials: int) -> jax.Array:
-    tw, n = w.shape
-    shifts = jnp.arange(PACK, dtype=jnp.uint32)[None, :, None]
-    bits = ((w[:, None, :] >> shifts) & 1).astype(jnp.bool_)
-    return bits.reshape(tw * PACK, n)[:trials]
 
 
 def execute_netlist(nl: Netlist, inputs: jax.Array,
                     interpret: bool | None = None) -> jax.Array:
     """inputs: bool (trials, n_in) -> bool (trials, n_out), fault-free
-    (fault-injection experiments use the core lax.scan executor)."""
+    (fault-injection experiments use the levelized or lax.scan executors)."""
     trials = inputs.shape[0]
     tw = (trials + PACK - 1) // PACK
     state = jnp.zeros((tw, nl.n_wires), jnp.uint32)
     state = state.at[:, 1].set(jnp.uint32(0xFFFFFFFF))       # const ONE wire
-    state = state.at[:, jnp.asarray(nl.inputs)].set(_pack_bits(inputs))
+    state = state.at[:, jnp.asarray(nl.inputs)].set(pack_trials(inputs))
     out = netlist_kernel(jnp.asarray(nl.gates), state,
                          interpret=use_interpret() if interpret is None else interpret)
-    return _unpack_bits(out[:, jnp.asarray(nl.outputs)], trials)
+    return unpack_trials(out[:, jnp.asarray(nl.outputs)], trials)

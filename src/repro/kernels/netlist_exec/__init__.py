@@ -1,0 +1,4 @@
+from .ops import execute_packed
+from .ref import execute_packed_ref
+
+__all__ = ["execute_packed", "execute_packed_ref"]

@@ -1,0 +1,59 @@
+"""Public levelized netlist-execution op: schedule, pack, mask, dispatch.
+
+Same contract as core/netlist.execute (iid p_gate or FaultModel via
+fold_in(key, gid), single-fault planes, bool (trials, n_in) in / bool
+(trials, n_out) out) — the whole netlist runs as ONE pallas_call instead of
+an O(G) scan.  Scheduling and fault-mask construction are shared verbatim
+with the jnp levelized path (core/scheduler.py), so the kernel is bit-exact
+against it by construction and both are bit-exact against the scan
+reference.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import use_interpret
+from ...core import scheduler
+from ...core.bitops import unpack_trials
+from ...core.netlist import Netlist
+from .kernel import netlist_exec_kernel
+
+
+def execute_packed(nl: Netlist, inputs: jax.Array,
+                   key: Optional[jax.Array] = None, p_gate=0.0,
+                   fault_gate: Optional[jax.Array] = None,
+                   max_width: Optional[int] = None, tile_tw: int = 8,
+                   interpret: bool | None = None) -> jax.Array:
+    """Execute `nl` on bool (trials, n_in) inputs in one kernel launch.
+
+    tile_tw packed-trial words (32 trials each) form one grid step's VMEM
+    tile; the trial axis is zero-padded up to a tile multiple (padding
+    trials are discarded on unpack, and identity mask columns keep them
+    corruption-free).
+    """
+    sch = scheduler.schedule(nl, max_width)
+    trials = inputs.shape[0]
+    state = scheduler.packed_initial_state(sch, inputs)
+    masks = scheduler.schedule_fault_masks(sch, trials, key, p_gate, fault_gate)
+
+    keep, flip = masks if masks is not None else (None, None)
+    tw = state.shape[1]
+    tile = min(tile_tw, tw)
+    pad = (-tw) % tile
+    if pad:
+        state = jnp.pad(state, ((0, 0), (0, pad)))
+        if flip is not None:
+            flip = jnp.pad(flip, ((0, 0), (0, 0), (0, pad)))
+        if keep is not None:
+            keep = jnp.pad(keep, ((0, 0), (0, 0), (0, pad)),
+                           constant_values=np.uint32(0xFFFFFFFF))
+    out = netlist_exec_kernel(
+        jnp.asarray(sch.rows_in), state, keep, flip, base=sch.base,
+        tile_tw=tile,
+        interpret=use_interpret() if interpret is None else interpret)
+    out = out[jnp.asarray(sch.remap[np.asarray(nl.outputs)])]
+    return unpack_trials(out.T, trials)

@@ -1,0 +1,7 @@
+"""Oracle: the jnp levelized bit-packed executor (core/scheduler.py), which
+is itself bit-exact against the lax.scan reference in core/netlist.py."""
+from __future__ import annotations
+
+from ...core.scheduler import execute_levelized as execute_packed_ref
+
+__all__ = ["execute_packed_ref"]

@@ -10,6 +10,7 @@ from repro.kernels.diag_parity import (encode_parity, encode_parity_ref,
 from repro.kernels.inject_scrub import inject_scrub, inject_scrub_ref
 from repro.kernels.tmr_vote import vote, vote_ref
 from repro.kernels.crossbar_nor import execute_netlist, execute_netlist_ref
+from repro.kernels.netlist_exec import execute_packed, execute_packed_ref
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 
 
@@ -197,6 +198,29 @@ def test_netlist_interpreter_sweep(nb, trials):
     got = execute_netlist(nl, inputs)
     want = execute_netlist_ref(nl, inputs)
     assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# --- netlist_exec (levelized executor) ----------------------------------------
+
+@pytest.mark.parametrize("nb,trials,tile_tw", [
+    (4, 3, 8),          # single partial lane word
+    (4, 64, 1),         # one word per tile, multi-tile grid
+    (8, 70, 8),         # padded lanes, single tile
+    (8, 300, 4),        # padded lanes AND padded tile, multi-tile grid
+])
+def test_netlist_exec_sweep(nb, trials, tile_tw):
+    """Levelized kernel vs its jnp oracle across tilings, clean and under
+    iid + single-fault injection (shared schedule-ordered masks)."""
+    nl = multiplier_netlist(nb)
+    rng = np.random.default_rng(trials)
+    inputs = jnp.array(rng.integers(0, 2, (trials, len(nl.inputs))).astype(bool))
+    key = jax.random.PRNGKey(nb)
+    fg = jnp.array(rng.integers(-1, nl.n_gates, trials).astype(np.int32))
+    for kw in (dict(), dict(key=key, p_gate=0.05),
+               dict(key=key, p_gate=0.05, fault_gate=fg)):
+        got = execute_packed(nl, inputs, tile_tw=tile_tw, **kw)
+        want = execute_packed_ref(nl, inputs, **kw)
+        assert (np.asarray(got) == np.asarray(want)).all(), kw
 
 
 # --- flash_attention -----------------------------------------------------------

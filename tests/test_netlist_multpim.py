@@ -20,13 +20,14 @@ def test_builder_folding():
     assert len(b._gates) == n_before               # xor with 0 is free
 
 
+@pytest.mark.parametrize("impl", ["scan", "level", "kernel"])
 @pytest.mark.parametrize("nb", [2, 4, 8])
-def test_multiplier_exact(nb):
+def test_multiplier_exact(nb, impl):
     rng = np.random.default_rng(nb)
     n = 200 if nb > 2 else 16
     a = rng.integers(0, 2**nb, n).astype(np.uint32)
     b = rng.integers(0, 2**nb, n).astype(np.uint32)
-    bits = multpim.multiply_bits(jnp.array(a), jnp.array(b), nb)
+    bits = multpim.multiply_bits(jnp.array(a), jnp.array(b), nb, impl=impl)
     want = multpim.true_product_bits(a, b, nb)
     assert (np.asarray(bits) == want).all()
 

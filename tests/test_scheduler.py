@@ -1,0 +1,251 @@
+"""Levelized netlist scheduling + bit-packed execution engines (DESIGN.md §11).
+
+Covers the levelizer invariants (inputs strictly earlier, capacity cap,
+exactly-once scheduling, contiguous row remap), bit-exactness of the
+levelized jnp path and the netlist_exec Pallas kernel against the lax.scan
+reference under 0/1/many-fault injection (float rates, FaultModels and
+single-fault planes), and the trial-packing round trip.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import multpim, netlist, scheduler
+from repro.core.bitops import pack_trials, unpack_trials
+from repro.faults import (CompositeFault, RetentionDrift, StuckAtFaults,
+                          TransientGateFaults)
+from repro.kernels.netlist_exec import execute_packed
+
+
+# --- trial packing -----------------------------------------------------------
+
+@pytest.mark.parametrize("trials,cols", [(1, 1), (31, 3), (32, 2), (70, 5)])
+def test_pack_trials_roundtrip(trials, cols):
+    rng = np.random.default_rng(trials)
+    bits = jnp.array(rng.integers(0, 2, (trials, cols)).astype(bool))
+    words = pack_trials(bits)
+    assert words.shape == ((trials + 31) // 32, cols)
+    assert (np.asarray(unpack_trials(words, trials)) == np.asarray(bits)).all()
+
+
+# --- levelizer invariants ----------------------------------------------------
+
+def _check_schedule_invariants(nl, sch):
+    # every gate scheduled exactly once
+    gids = sch.sched_gid[sch.sched_gid >= 0]
+    assert sorted(gids.tolist()) == list(range(nl.n_gates))
+    assert (sch.widths <= sch.max_width).all()
+    assert sch.n_levels >= sch.depth
+    # every gate's inputs are produced at strictly earlier levels
+    level_of_wire = np.zeros(nl.n_wires, np.int64)        # consts/inputs: 0
+    for l in range(sch.n_levels):
+        for s in range(int(sch.widths[l])):
+            i1, i2, i3, out = sch.sched[l, s]
+            assert max(level_of_wire[i1], level_of_wire[i2],
+                       level_of_wire[i3]) < l + 1
+            level_of_wire[out] = l + 1
+    # remap: bijective into the packed row space, slot ownership honored
+    assert sch.remap[0] == 0 and (sch.remap[nl.inputs] ==
+                                  2 + np.arange(len(nl.inputs))).all()
+    rows = sch.remap[nl.gates[:, 3]]
+    assert len(set(rows.tolist())) == nl.n_gates
+    slot = rows - sch.base
+    lvl, s = slot // sch.max_width, slot % sch.max_width
+    assert (sch.sched_gid[lvl, s] == np.arange(nl.n_gates)).all()
+
+
+@pytest.mark.parametrize("nb", [2, 4, 8, 16])
+def test_multiplier_schedule_invariants(nb):
+    nl = multpim.multiplier_netlist(nb)
+    _check_schedule_invariants(nl, scheduler.schedule(nl))
+
+
+@pytest.mark.parametrize("max_width", [1, 7, 32])
+def test_width_cap_respected(max_width):
+    nl = multpim.multiplier_netlist(4)
+    sch = scheduler.levelize(nl, max_width=max_width)
+    assert sch.max_width == max_width
+    _check_schedule_invariants(nl, sch)
+
+
+def test_empty_netlist():
+    bld = netlist.NetlistBuilder()
+    (x,) = bld.input_bits(1)
+    bld.mark_outputs([x, bld.ZERO, bld.ONE])
+    nl = bld.build()
+    sch = scheduler.schedule(nl)
+    assert sch.n_levels == 0 and sch.n_gates == 0
+    inputs = jnp.array([[True], [False], [True]])
+    got = scheduler.execute_levelized(nl, inputs)
+    want = netlist.execute(nl, inputs)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def _random_netlist(seed: int) -> netlist.Netlist:
+    rng = np.random.default_rng(seed)
+    bld = netlist.NetlistBuilder(cse=bool(rng.integers(2)))
+    wires = list(bld.input_bits(int(rng.integers(2, 6)))) + [bld.ZERO, bld.ONE]
+    ops = [bld.not_, bld.nor, bld.nand, bld.and_, bld.or_, bld.xor,
+           bld.min3, bld.maj3]
+    for _ in range(int(rng.integers(5, 60))):
+        op = ops[rng.integers(len(ops))]
+        n_args = {bld.not_: 1, bld.min3: 3, bld.maj3: 3}.get(op, 2)
+        args = [wires[rng.integers(len(wires))] for _ in range(n_args)]
+        wires.append(op(*args))
+    out = [wires[rng.integers(len(wires))]
+           for _ in range(int(rng.integers(1, 8)))]
+    bld.mark_outputs(out)
+    return bld.build()
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_random_netlist_schedule_replays_scan(seed):
+    """Property: on random netlists the schedule satisfies the level
+    invariants and the levelized engine replays the scan reference exactly
+    (clean and under iid + single-fault injection)."""
+    nl = _random_netlist(seed)
+    sch = scheduler.levelize(nl)
+    _check_schedule_invariants(nl, sch)
+
+    rng = np.random.default_rng(seed + 1)
+    trials = int(rng.integers(1, 80))
+    inputs = jnp.array(rng.integers(0, 2, (trials, len(nl.inputs))).astype(bool))
+    key = jax.random.PRNGKey(seed % 997)
+    fg = jnp.array(rng.integers(-1, max(nl.n_gates, 1), trials).astype(np.int32))
+    for kw in (dict(),
+               dict(key=key, p_gate=0.1),
+               dict(fault_gate=fg),
+               dict(key=key, p_gate=0.1, fault_gate=fg)):
+        want = netlist.execute(nl, inputs, **kw)
+        got = scheduler.execute_levelized(nl, inputs, **kw)
+        assert (np.asarray(got) == np.asarray(want)).all(), kw
+
+
+# --- packed engines vs the scan reference, all fault surfaces ----------------
+
+FAULT_CASES = [
+    ("clean", dict()),
+    ("iid", dict(key=True, p_gate=0.03)),
+    ("single", dict(fault_gate=True)),
+    ("iid+single", dict(key=True, p_gate=0.03, fault_gate=True)),
+    ("gate_model", dict(key=True, p_gate=TransientGateFaults(0.03))),
+    ("stuckat", dict(key=True, p_gate=StuckAtFaults(0.04, 0.02))),
+    ("composite", dict(key=True, p_gate=CompositeFault(
+        (TransientGateFaults(0.02), StuckAtFaults(0.02, 0.01),
+         RetentionDrift(0.01))))),
+]
+
+
+@pytest.mark.parametrize("name,spec", FAULT_CASES, ids=[c[0] for c in FAULT_CASES])
+@pytest.mark.parametrize("nb,trials", [(4, 33), (8, 300)])
+def test_engines_bit_exact_vs_scan(name, spec, nb, trials):
+    """level and kernel engines are bit-exact vs the scan reference,
+    fault streams included — iid, FaultModel taxonomies and single-fault
+    planes, at trial counts that exercise lane padding and multi-tile
+    grids."""
+    nl = multpim.multiplier_netlist(nb)
+    rng = np.random.default_rng(nb * 1000 + trials)
+    a = jnp.array(rng.integers(0, 2**nb, trials).astype(np.uint32))
+    b = jnp.array(rng.integers(0, 2**nb, trials).astype(np.uint32))
+    kw = dict(spec)
+    if kw.pop("key", False):
+        kw["key"] = jax.random.PRNGKey(3)
+    if kw.get("fault_gate") is True:
+        kw["fault_gate"] = jnp.array(
+            rng.integers(-1, nl.n_gates, trials).astype(np.int32))
+    want = np.asarray(multpim.multiply_bits(a, b, nb, impl="scan", **kw))
+    level = np.asarray(multpim.multiply_bits(a, b, nb, impl="level", **kw))
+    kern = np.asarray(multpim.multiply_bits(a, b, nb, impl="kernel", **kw))
+    assert (level == want).all(), "level != scan"
+    assert (kern == want).all(), "kernel != scan"
+
+
+def test_single_fault_every_gate_position_matches_scan():
+    """The exhaustive fault_gate=arange(G) sweep (the alpha measurement)
+    is identical across engines."""
+    nl = multpim.multiplier_netlist(4)
+    rng = np.random.default_rng(0)
+    a = jnp.array(rng.integers(0, 16, nl.n_gates).astype(np.uint32))
+    b = jnp.array(rng.integers(0, 16, nl.n_gates).astype(np.uint32))
+    fg = jnp.arange(nl.n_gates, dtype=jnp.int32)
+    want = np.asarray(multpim.multiply_bits(a, b, 4, fault_gate=fg, impl="scan"))
+    for impl in ("level", "kernel"):
+        got = np.asarray(multpim.multiply_bits(a, b, 4, fault_gate=fg, impl=impl))
+        assert (got == want).all(), impl
+
+
+def test_kernel_max_width_override_bit_exact():
+    nl = multpim.multiplier_netlist(8)
+    rng = np.random.default_rng(5)
+    a = jnp.array(rng.integers(0, 256, 40).astype(np.uint32))
+    b = jnp.array(rng.integers(0, 256, 40).astype(np.uint32))
+    want = np.asarray(multpim.multiply_bits(a, b, 8, impl="scan"))
+    inputs = jnp.concatenate([
+        jnp.array(((np.asarray(a)[:, None] >> np.arange(8)) & 1).astype(bool)),
+        jnp.array(((np.asarray(b)[:, None] >> np.arange(8)) & 1).astype(bool)),
+    ], axis=-1)
+    for mw in (16, 64):
+        got = np.asarray(execute_packed(nl, inputs, max_width=mw))
+        assert (got == want).all(), mw
+        got = np.asarray(scheduler.execute_levelized(nl, inputs, max_width=mw))
+        assert (got == want).all(), mw
+
+
+# --- scan path fault-model parity (satellite) --------------------------------
+
+def test_scan_execute_accepts_fault_model():
+    """netlist.execute takes a FaultModel wherever p_gate is accepted
+    (matching stateful_logic.maybe_flip): a float rate and its
+    TransientGateFaults wrapper draw the identical stream."""
+    nl = multpim.multiplier_netlist(4)
+    rng = np.random.default_rng(2)
+    inputs = jnp.array(rng.integers(0, 2, (64, len(nl.inputs))).astype(bool))
+    key = jax.random.PRNGKey(11)
+    as_float = netlist.execute(nl, inputs, key=key, p_gate=0.05)
+    as_model = netlist.execute(nl, inputs, key=key,
+                               p_gate=TransientGateFaults(0.05))
+    assert (np.asarray(as_float) == np.asarray(as_model)).all()
+    # stuck-at through the scan path is idempotent under a fixed key
+    model = StuckAtFaults(0.1, 0.1)
+    once = netlist.execute(nl, inputs, key=key, p_gate=model)
+    again = netlist.execute(nl, inputs, key=key, p_gate=model)
+    assert (np.asarray(once) == np.asarray(again)).all()
+
+
+# --- builder CSE + golden netlist shapes -------------------------------------
+
+def test_cse_collapses_structural_duplicates():
+    bld = netlist.NetlistBuilder()
+    x, y = bld.input_bits(2)
+    w1 = bld.xor(x, y)
+    n1 = len(bld._gates)
+    w2 = bld.xor(x, y)                    # re-emission hits the CSE cache
+    assert w2 == w1 and len(bld._gates) == n1
+    assert bld.min3(y, x, bld.ONE) == bld.nor(x, y)   # commutative match
+
+    raw = netlist.NetlistBuilder(cse=False)
+    x, y = raw.input_bits(2)
+    raw.xor(x, y)
+    n1 = len(raw._gates)
+    raw.xor(x, y)
+    assert len(raw._gates) == 2 * n1      # duplicates kept without CSE
+
+
+#: golden (gates, depth) for the MultPIM multiplier, before and after CSE.
+#: The builder's folding already emits a duplication-free netlist, so CSE
+#: leaves the multiplier untouched (cse_saved=0 in netlist_bench) — the
+#: equality below is the regression guard for both counts.
+GOLDEN = {8: (760, 66), 16: (3312, 146), 32: (13792, 306)}
+
+
+@pytest.mark.parametrize("nb", sorted(GOLDEN))
+def test_golden_multiplier_gate_and_depth_counts(nb):
+    gates, depth = GOLDEN[nb]
+    nl = multpim.multiplier_netlist(nb)
+    nl_raw = multpim.multiplier_netlist(nb, cse=False)
+    assert nl.n_gates == gates
+    assert nl_raw.n_gates == gates
+    assert scheduler.schedule(nl).depth == depth
