@@ -23,6 +23,12 @@ TMR is included as a report-only point: analytics.p_mult_tmr is an explicit
 word-level upper bound, so it is *expected* to sit above the per-bit-voting
 measurement (no containment assert).
 
+A protection-scheme grid campaign additionally walks the whole
+`repro.reliability` design space (unprotected / ECC / three TMR
+disciplines / ECC+TMR) through one `sweep_schemes` code path, measuring
+long-term block corruption per scheme and asserting every protected
+scheme beats the unprotected baseline.
+
 Smoke mode (REPRO_BENCH_SMOKE=1, set by `benchmarks.run --smoke`): 16-bit
 multiplier and smaller trial budgets — the CI artifact path.
 """
@@ -44,8 +50,9 @@ from repro.core import analytics as A
 from repro.core import multpim
 from repro.core.reliability import encode_words
 from repro.faults import (CampaignConfig, TransientBitFlips, run_campaign,
-                          sweep)
+                          sweep, sweep_schemes)
 from repro.kernels.inject_scrub import inject_scrub
+from repro.reliability import standard_grid
 
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
 N_BITS = 16 if SMOKE else 32
@@ -60,6 +67,9 @@ FIG4_PGATES = (3e-5, 1e-4) if SMOKE else (1e-5, 3e-5)
 #: scaled NN case study: M_SCALED mults/sample, p_mask scaled from 0.03%
 M_SCALED, P_MASK_SCALED = (8, 0.25) if SMOKE else (16, 0.25)
 FIG5_POINTS = ({"p_input": 1e-4, "T": 8}, {"p_input": 5e-4, "T": 8})
+#: scheme-grid operating point (repro.reliability design space, §V-§VI):
+#: high enough that the unprotected baseline visibly fails over the horizon
+GRID_P_INPUT, GRID_T = 2e-4, 4
 
 
 def _rand_words(key, n: int) -> jax.Array:
@@ -133,6 +143,29 @@ def make_fig5_trial(p_input: float, T: int):
         return fail, {"corrected": corrected, "uncorrectable": uncorrectable}
     jitted = jax.jit(impl, static_argnums=1)
     return lambda key, n: jitted(key, n)
+
+
+# -- protection-scheme design-space grid --------------------------------------
+
+def make_scheme_trial(scheme):
+    """One trial: a 32-word block pytree protected by `scheme`, corrupted
+    and scrubbed over GRID_T exposure intervals; failure = the decoded
+    payload differs from the original at the horizon.  The same closure
+    works for every scheme in the grid — this is the paper's §V-§VI design
+    space walked through ONE code path (faults.campaign.sweep_schemes)."""
+    model = TransientBitFlips(GRID_P_INPUT)
+
+    def trial(key):
+        kb, ki = jax.random.split(key)
+        w = jax.random.bits(kb, (32,), jnp.uint32)
+        prot = scheme.protect({"w": w})
+        for t in range(GRID_T):
+            prot = scheme.corrupt_store(prot, model,
+                                        jax.random.fold_in(ki, t))
+            prot, _ = scheme.scrub(prot)
+        return (scheme.read(prot)["w"] != w).any()
+
+    return trial
 
 
 def run() -> list:
@@ -216,6 +249,29 @@ def run() -> list:
         assert agree, (
             f"fig5 {pt}: closed form {model:.4f} outside Wilson interval "
             f"[{lo:.4f}, {hi:.4f}] (n={res.n_trials})")
+
+    # protection-scheme grid: long-term block corruption across the whole
+    # repro.reliability design space (jnp backends: trials are vmapped)
+    grid_cfg = CampaignConfig(
+        batch_size=min(BATCH, 256), max_trials=512 if SMOKE else 1024,
+        min_trials=256, ci_halfwidth=0.03, z=Z)
+    grid = sweep_schemes(make_scheme_trial, standard_grid(impl="jnp"),
+                         jax.random.fold_in(key, 400), grid_cfg)
+    p_hats = {}
+    for scheme, res in grid:
+        lo, hi = res.ci
+        p_hats[scheme.name] = res.p_hat
+        cost = scheme.overhead()
+        rows.append((f"campaign_mc.scheme_{scheme.name}", 0.0,
+                     f"p_hat={res.p_hat:.4f} ci=[{lo:.4f},{hi:.4f}] "
+                     f"n={res.n_trials} p_input={GRID_P_INPUT:g} T={GRID_T} "
+                     f"cost[{cost.describe()}]"))
+    # ordering sanity: every protected scheme beats (or ties) the baseline
+    for name, p_hat in p_hats.items():
+        if name != "unprotected":
+            assert p_hat <= p_hats["unprotected"] + 0.02, (
+                f"scheme {name} (p_hat={p_hat:.4f}) worse than unprotected "
+                f"({p_hats['unprotected']:.4f})")
     return rows
 
 

@@ -63,7 +63,8 @@ def run() -> list:
 
     # measured counterpart on the TPU-word code: the per-step parity refresh
     # (re-encode after an optimizer write) as ONE fused launch over the
-    # packed arena vs one encode per pytree leaf
+    # packed arena — driven through the unified Scheme API (DESIGN.md §12)
+    # — vs one encode per pytree leaf (the pre-arena layout)
     import time
 
     import jax
@@ -71,7 +72,7 @@ def run() -> list:
 
     from repro.core.arena import pack
     from repro.core.reliability import protect_leaves
-    from repro.kernels.diag_parity import encode_parity
+    from repro.reliability import DiagParityEcc
 
     key = jax.random.PRNGKey(0)
     params = {f"leaf{i}": jax.random.normal(jax.random.fold_in(key, i),
@@ -86,10 +87,12 @@ def run() -> list:
         return (time.time() - t0) / iters * 1e6
 
     buf, _ = pack(params)
-    us_fused = timed(lambda: encode_parity(pack(params)[0]))
+    scheme = DiagParityEcc()
+    us_fused = timed(lambda: scheme.refresh(params).redundancy)
     us_leaf = timed(lambda: protect_leaves(params))
     rows.append(("ecc_overhead.refresh_arena_fused_20leaves", us_fused,
-                 f"words={buf.shape[0]} one encode launch"))
+                 f"words={buf.shape[0]} one encode launch "
+                 f"({scheme.overhead().describe()})"))
     rows.append(("ecc_overhead.refresh_per_leaf_20leaves", us_leaf,
                  f"speedup_arena_fused={us_leaf / us_fused:.2f}x"))
     return rows

@@ -29,12 +29,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import multpim, scheduler
+from repro.reliability import backend
 
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
-N_BITS = int(os.environ.get("REPRO_NETLIST_BENCH_BITS", "32"))
+N_BITS = 32
 TRIALS = 512
 ITERS = 2 if SMOKE else 5
-IMPLS = ("scan", "level", "kernel")
+#: all registered engines, scan (the reference/oracle) first
+IMPLS = ("scan",) + tuple(i for i in backend.implementations("netlist_exec")
+                          if i != "scan")
 
 
 def _time(f, *args, iters: int = ITERS) -> float:

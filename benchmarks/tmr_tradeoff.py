@@ -1,6 +1,8 @@
-"""Paper §V: TMR latency/area/throughput trade-off table, measured from the
-crossbar simulator's cycle accounting (vs the unreliable baseline), plus
-the periphery-based alternative's 1024x latency penalty the paper cites.
+"""Paper §V: protection-scheme latency/area/throughput trade-off table,
+swept over the whole `repro.reliability` design space (DESIGN.md §12) —
+every scheme's CostReport plus the crossbar simulator's cycle accounting
+for the three TMR disciplines (vs the unreliable baseline), plus the
+periphery-based alternative's 1024x latency penalty the paper cites.
 """
 from __future__ import annotations
 
@@ -17,32 +19,35 @@ import numpy as np
 
 from repro.core import multpim
 from repro.core.tmr import TMR_COSTS
+from repro.reliability import Tmr, standard_grid
 
 ROWS_PER_XBAR = 1024
+
+#: crossbar cycle model per TMR discipline: (execution multiplier, copies
+#: running concurrently) — vote is always Min3+NOT per output bit
+_DISCIPLINE_CYCLES = {"serial": 3, "parallel": 1, "semi_parallel": 1}
 
 
 def run() -> list:
     rows = []
     nl = multpim.multiplier_netlist(32)
     base_cycles = nl.n_gates                       # 1 cycle per vectored gate
-    vote_cycles = 2 * 64                            # Min3+NOT per output bit
-    for mode, cost in TMR_COSTS.items():
-        if mode == "serial":
-            cycles = 3 * base_cycles + vote_cycles
-            area = 1.0
-            thr = 1.0
-        elif mode == "parallel":
-            cycles = base_cycles + vote_cycles      # partitions run copies concurrently
-            area = 3.0
-            thr = 1.0
-        else:
-            cycles = base_cycles + vote_cycles
-            area = 1.0
-            thr = 1.0 / 3.0
-        rows.append((f"tmr_tradeoff.{mode}", 0.0,
-                     f"latency={cycles/base_cycles:.2f}x area={area:.0f}x "
-                     f"throughput={thr:.2f}x (paper: {cost.latency_x:.0f}x/"
-                     f"{cost.area_x:.0f}x/{cost.throughput_x:.2f}x)"))
+    vote_cycles = 2 * 64                           # Min3+NOT per output bit
+
+    # one code path over the scheme grid: each scheme reports its own
+    # CostReport; TMR disciplines additionally get the simulator's cycle
+    # accounting cross-checked against the paper's stated costs
+    for scheme in standard_grid():
+        cost = scheme.overhead()
+        derived = cost.describe()
+        if isinstance(scheme, Tmr):
+            cycles = (_DISCIPLINE_CYCLES[scheme.discipline] * base_cycles
+                      + vote_cycles)
+            paper = TMR_COSTS[scheme.discipline]
+            derived += (f" sim_latency={cycles / base_cycles:.2f}x "
+                        f"(paper: {paper.latency_x:.0f}x/"
+                        f"{paper.area_x:.0f}x/{paper.throughput_x:.2f}x)")
+        rows.append((f"tmr_tradeoff.{scheme.name}", 0.0, derived))
     rows.append(("tmr_tradeoff.periphery_alternative", 0.0,
                  f"latency={ROWS_PER_XBAR}x (paper: up to 1024x for 1024 rows)"))
 

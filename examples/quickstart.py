@@ -18,7 +18,8 @@ import numpy as np
 
 from repro.core import ecc
 from repro.core.crossbar import Crossbar, ErrorModel
-from repro.core.reliability import ReliableStore, inject_bit_flips
+from repro.core.reliability import ReliableStore
+from repro.faults import inject_bit_flips
 from repro.core.tmr import tmr, vote_array
 
 key = jax.random.PRNGKey(0)

@@ -16,11 +16,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.reliability import inject_bit_flips
-from repro.core.tmr import vote_array
+from repro.faults import inject_bit_flips
 from repro.models import params as P
 from repro.models import transformer as T
 from repro.models.steps import make_decode_step, make_prefill_step
+from repro.reliability import Tmr
 
 
 def main():
@@ -50,11 +50,13 @@ def main():
     print(f"SDC demo: corrupting weights at p_bit={p_bit:g} changed "
           f"{n_diff}/{clean.size} generated tokens — silently.")
 
-    # serial TMR: copy 2 is the corrupted replica
-    copies = [generate(params), generate(corrupted_params), generate(params)]
-    voted = vote_array(*copies)
+    # serial TMR through the unified scheme API (DESIGN.md §12): copy 2 is
+    # the corrupted replica; per-bit voting over the three generations
+    scheme = Tmr("serial")
+    voted = scheme.wrap(generate)(params, corrupted_params, params)
     print(f"TMR(serial, per-bit vote): voted output matches clean: "
-          f"{bool((voted == clean).all())}")
+          f"{bool((voted == clean).all())} "
+          f"(cost: {scheme.overhead().describe()})")
     print("sample (clean): ", np.asarray(clean[0, :12]).tolist())
     print("sample (corrupt):", np.asarray(corrupted[0, :12]).tolist())
     print("sample (voted):  ", np.asarray(voted[0, :12]).tolist())

@@ -29,6 +29,12 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+try:                              # bfloat16 leaves round-trip as uint16 views
+    import ml_dtypes
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:               # pragma: no cover - ml_dtypes ships with jax
+    _BF16 = None
+
 __all__ = ["Checkpointer", "restore_resharded"]
 
 
@@ -68,13 +74,19 @@ class Checkpointer:
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         leaves, treedef = jax.tree.flatten(host_state)
+        # npz cannot represent bfloat16 (it degrades to a raw V2 void
+        # dtype); store those leaves as uint16 bit views and record their
+        # indices so restore can view them back losslessly
+        bf16 = [i for i, l in enumerate(leaves)
+                if _BF16 is not None and l.dtype == _BF16]
         np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+                 **{f"leaf_{i}": (l.view(np.uint16) if i in bf16 else l)
+                    for i, l in enumerate(leaves)})
         with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
             pickle.dump(treedef, f)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump({"step": step, "n_leaves": len(leaves),
-                       "time": time.time()}, f)
+                       "bf16_leaves": bf16, "time": time.time()}, f)
         old = final + ".old"
         if os.path.isdir(final):
             # re-save of the same step (e.g. after an ECC-triggered restore
@@ -134,8 +146,12 @@ class Checkpointer:
         path = os.path.join(self.dir, name)
         with open(os.path.join(path, "treedef.pkl"), "rb") as f:
             treedef = pickle.load(f)
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        bf16 = set(manifest.get("bf16_leaves", ()))   # absent pre-upgrade
         z = np.load(os.path.join(path, "arrays.npz"))
-        leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+        leaves = [z[f"leaf_{i}"].view(_BF16) if i in bf16 else z[f"leaf_{i}"]
+                  for i in range(len(z.files))]
         return treedef.unflatten(leaves)
 
 

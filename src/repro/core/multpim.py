@@ -15,45 +15,31 @@ voting").
 from __future__ import annotations
 
 import functools
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from . import scheduler
+from ..reliability import backend
 from .bitops import from_bits, to_bits
-from .netlist import Netlist, NetlistBuilder, execute, full_adder
+from .netlist import Netlist, NetlistBuilder, full_adder
 from .stateful_logic import g_maj3
 
 __all__ = ["multiplier_netlist", "multiply_bits", "multiply_words",
            "multiply_tmr_bits", "true_product_bits", "execute_netlist"]
-
-#: netlist execution engine: "scan" (lax.scan over gates — the reference),
-#: "level" (levelized bit-packed jnp, core/scheduler.py — default) or
-#: "kernel" (one Pallas launch, kernels/netlist_exec).  All three are
-#: bit-exact to each other, fault streams included.
-DEFAULT_IMPL = os.environ.get("REPRO_NETLIST_IMPL", "level")
 
 
 def execute_netlist(nl: Netlist, inputs: jax.Array,
                     key: Optional[jax.Array] = None, p_gate=0.0,
                     fault_gate: Optional[jax.Array] = None,
                     impl: Optional[str] = None) -> jax.Array:
-    """Dispatch a netlist execution to the selected engine."""
-    impl = impl or DEFAULT_IMPL
-    if impl == "scan":
-        return execute(nl, inputs, key=key, p_gate=p_gate,
-                       fault_gate=fault_gate)
-    if impl == "level":
-        return scheduler.execute_levelized(nl, inputs, key=key, p_gate=p_gate,
-                                           fault_gate=fault_gate)
-    if impl == "kernel":
-        from ..kernels.netlist_exec import execute_packed
-        return execute_packed(nl, inputs, key=key, p_gate=p_gate,
-                              fault_gate=fault_gate)
-    raise ValueError(f"unknown netlist impl {impl!r} "
-                     "(expected scan | level | kernel)")
+    """Dispatch a netlist execution through the backend registry
+    (op ``netlist_exec``: "scan" — the lax.scan reference, "level" — the
+    levelized bit-packed jnp default, "kernel" — one Pallas launch; see
+    reliability/backend.py for the REPRO_IMPL override).  All three are
+    bit-exact to each other, fault streams included."""
+    fn = backend.dispatch("netlist_exec", impl)
+    return fn(nl, inputs, key=key, p_gate=p_gate, fault_gate=fault_gate)
 
 
 @functools.lru_cache(maxsize=None)
@@ -108,8 +94,8 @@ def multiply_bits(a_words: jax.Array, b_words: jax.Array, n_bits: int,
     """Multiply batches of N-bit words through the in-memory netlist.
 
     p_gate may be a float rate or any faults.FaultModel; impl selects the
-    execution engine (see DEFAULT_IMPL) — the result is bit-exact across
-    engines.  Returns the 2N-bit product as a bool bit-plane (trials, 2N),
+    execution engine (backend registry op ``netlist_exec``) — the result is
+    bit-exact across engines.  Returns the 2N-bit product as a bool bit-plane (trials, 2N),
     LSB first — bit-exact regardless of x64 mode.
     """
     nl = multiplier_netlist(n_bits)

@@ -27,6 +27,12 @@ checkpoint restore — connecting the paper's mechanism to large-scale fault
 tolerance.  The pure-jnp word functions (`encode_words`, `correct_words`)
 are retained both as the kernels' bit-exact oracle and as the
 `backend="jnp"` fallback.
+
+NOTE (DESIGN.md §12): the public protection API is now
+`repro.reliability` — `DiagParityEcc()` wraps this module's machinery
+behind the composable `Scheme` protocol and the backend registry.
+`ReliableStore` and `tmr_serve` remain as bit-exact building blocks /
+deprecation shims.
 """
 from __future__ import annotations
 
@@ -40,7 +46,7 @@ from . import arena
 from .bitops import bit_position, popcount32, rotl32
 
 __all__ = ["WordEccConfig", "encode_words", "syndrome_words", "correct_words",
-           "ReliableStore", "ScrubReport", "inject_bit_flips", "tmr_serve",
+           "ReliableStore", "ScrubReport", "tmr_serve",
            "protect_leaves", "scrub_leaves"]
 
 BLOCK = arena.BLOCK  # words per block == bits per word
@@ -167,38 +173,36 @@ class ReliableStore:
         # tree_flatten — stores crossing a jit boundary just repack.
         self._packed: Optional[Tuple[jax.Array, arena.ArenaSpec]] = None
 
+    # the single implementation of pack/encode/scrub lives in the scheme
+    # layer (DESIGN.md §12); this class adapts it to the historic surface
+    def _scheme(self):
+        from ..reliability.scheme import DiagParityEcc
+        return DiagParityEcc(slopes=self.cfg.slopes, impl=self.backend)
+
+    @classmethod
+    def _from_protected(cls, prot, cfg: WordEccConfig,
+                        backend: str) -> "ReliableStore":
+        store = cls(prot.payload, prot.redundancy, cfg, backend)
+        store._packed = prot._packed
+        return store
+
     @staticmethod
     def protect(params: Any, cfg: WordEccConfig = WordEccConfig(),
                 backend: str = "kernel") -> "ReliableStore":
-        packed = arena.pack(params)
-        buf = packed[0]
-        if backend == "kernel" and buf.shape[0]:
-            from ..kernels.diag_parity import encode_parity
-            parity = encode_parity(buf, slopes=cfg.slopes)
-        else:
-            parity = encode_words(buf, cfg)
-        store = ReliableStore(params, parity, cfg, backend)
-        store._packed = packed
-        return store
+        from ..reliability.scheme import DiagParityEcc
+        scheme = DiagParityEcc(slopes=cfg.slopes, impl=backend)
+        return ReliableStore._from_protected(scheme.protect(params),
+                                             cfg, backend)
 
     def refresh(self, new_params: Any) -> "ReliableStore":
         return ReliableStore.protect(new_params, self.cfg, self.backend)
 
     def scrub(self) -> Tuple["ReliableStore", ScrubReport]:
-        buf, spec = self._packed if self._packed is not None \
-            else arena.pack(self.params)
-        if self.backend == "kernel" and buf.shape[0]:
-            from ..kernels.diag_parity import scrub as scrub_op
-            fixed, par2, counts = scrub_op(buf, self.parity,
-                                           slopes=self.cfg.slopes)
-            report = ScrubReport(corrected=counts[0], parity_fixed=counts[1],
-                                 uncorrectable=counts[2])
-        else:
-            fixed, par2, report = correct_words(buf, self.parity, self.cfg)
-        out = ReliableStore(arena.unpack(fixed, spec), par2, self.cfg,
-                            self.backend)
-        out._packed = (fixed, spec)
-        return out, report
+        scheme = self._scheme()
+        prot = scheme.adopt(self.params, self.parity)
+        prot._packed = self._packed
+        fixed, report = scheme.scrub(prot)
+        return self._from_protected(fixed, self.cfg, self.backend), report
 
     @property
     def n_blocks(self) -> int:
@@ -257,38 +261,24 @@ def scrub_leaves(params: Any, parity_tree: Any,
     return treedef.unflatten(out_p), treedef.unflatten(out_c), total
 
 
-# Deprecated re-export: the canonical transient injector moved to the fault
-# subsystem (repro.faults.models) as part of the unified FaultModel taxonomy.
-# Kept so historic `from repro.core.reliability import inject_bit_flips`
-# call sites keep working; new code should use repro.faults directly.
+# Deprecated re-export (module attribute only — dropped from __all__): the
+# canonical transient injector lives in repro.faults.models as part of the
+# unified FaultModel taxonomy.  Kept one release so historic
+# `from repro.core.reliability import inject_bit_flips` call sites keep
+# working; new code must use repro.faults directly.
 from ..faults.models import inject_bit_flips  # noqa: E402,F401
 
 
 def tmr_serve(serve_fn, mode: str = "serial", use_kernel: bool = True):
-    """TMR-voted serving (paper §V on TPU): run the model 3x, vote per-bit.
+    """DEPRECATED shim: TMR-voted serving via `repro.reliability.Tmr.wrap`.
 
-    serve_fn(params, *inputs) -> pytree of arrays.  The three copies receive
-    independently *scrubbed/corrupted* params via an optional corruptor in
-    tests; in production the copies run on disjoint replica groups (parallel
-    mode shards the leading replica axis over the mesh).  Voting goes
-    through the Pallas tmr_vote kernel by default (one fused memory-bound
-    pass per output leaf); use_kernel=False falls back to the jnp voter.
+    serve_fn(params, *inputs) -> pytree of arrays; the wrapper is called as
+    wrapped(p1, p2, p3, *inputs) with per-copy parameter versions.  All
+    three paper disciplines are accepted ('serial', 'parallel',
+    'semi_parallel'); use_kernel=False selects the jnp voter.  New code
+    should construct `Tmr(discipline=...).wrap(serve_fn)` directly
+    (DESIGN.md §12) — this shim is bit-exact against it by construction.
     """
-    if use_kernel:
-        from ..kernels.tmr_vote import vote as _vote
-    else:
-        from .tmr import vote_array as _vote
-
-    def serial(p1, p2, p3, *inputs):
-        o1 = serve_fn(p1, *inputs)
-        o2 = serve_fn(p2, *inputs)
-        o3 = serve_fn(p3, *inputs)
-        return jax.tree.map(_vote, o1, o2, o3)
-
-    def parallel(p1, p2, p3, *inputs):
-        stacked = jax.tree.map(lambda a, b, c: jnp.stack([a, b, c]), p1, p2, p3)
-        outs = jax.vmap(lambda p: serve_fn(p, *inputs))(stacked)
-        o1, o2, o3 = (jax.tree.map(lambda x, i=i: x[i], outs) for i in range(3))
-        return jax.tree.map(_vote, o1, o2, o3)
-
-    return serial if mode == "serial" else parallel
+    from ..reliability.scheme import Tmr
+    return Tmr(discipline=mode,
+               impl=None if use_kernel else "jnp").wrap(serve_fn)

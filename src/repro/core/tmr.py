@@ -14,6 +14,11 @@ bottleneck near p_gate = 1e-9 (Fig. 4, dashed line).
 
 Per-bit voting strictly dominates per-element voting: they differ only where
 per-element voting is undefined (no two copies agree on the whole word).
+
+NOTE (DESIGN.md §12): the public protection API is `repro.reliability.Tmr`,
+which exposes all three disciplines (including semi-parallel) end-to-end
+behind the composable `Scheme` protocol; the voters and cost table here
+are the building blocks it dispatches to.
 """
 from __future__ import annotations
 

@@ -17,11 +17,11 @@ from .models import (CompositeFault, FaultModel, RetentionDrift,
                      StuckAtFaults, TransientBitFlips, TransientGateFaults,
                      inject_bit_flips)
 from .campaign import (CampaignConfig, CampaignResult, run_campaign, sweep,
-                       wilson_interval)
+                       sweep_schemes, wilson_interval)
 
 __all__ = [
     "FaultModel", "TransientBitFlips", "TransientGateFaults", "StuckAtFaults",
     "RetentionDrift", "CompositeFault", "inject_bit_flips",
     "CampaignConfig", "CampaignResult", "run_campaign", "sweep",
-    "wilson_interval",
+    "sweep_schemes", "wilson_interval",
 ]

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["CampaignConfig", "CampaignResult", "wilson_interval",
-           "run_campaign", "sweep"]
+           "run_campaign", "sweep", "sweep_schemes"]
 
 
 def wilson_interval(k: int, n: int, z: float = 1.96) -> Tuple[float, float]:
@@ -163,4 +163,23 @@ def sweep(make_trial: Callable[..., Callable], points: Sequence[Mapping[str, Any
                          for k, v in pt.items())
         out.append((pt, run_campaign(trial, jax.random.fold_in(key, i), cfg,
                                      batched=batched, name=label)))
+    return out
+
+
+def sweep_schemes(make_trial: Callable, schemes: Sequence,
+                  key: jax.Array, cfg: CampaignConfig = CampaignConfig(), *,
+                  batched: bool = False) -> List[Tuple[Any, CampaignResult]]:
+    """Run one campaign per protection scheme (DESIGN.md §12).
+
+    THE code path every consumer uses to walk the `repro.reliability`
+    Scheme design space: `make_trial(scheme)` closes the (static, hashable)
+    scheme into a trial function, and each grid point runs as an
+    independent, individually replayable campaign labeled `scheme.name`.
+    """
+    out = []
+    for i, scheme in enumerate(schemes):
+        trial = make_trial(scheme)
+        out.append((scheme, run_campaign(trial, jax.random.fold_in(key, i),
+                                         cfg, batched=batched,
+                                         name=scheme.name)))
     return out

@@ -7,7 +7,8 @@ Each kernel package has:
 
 This container is CPU-only: kernels are validated with interpret=True
 (the kernel body executes on CPU); on a real TPU set
-REPRO_PALLAS_INTERPRET=0.
+REPRO_PALLAS_INTERPRET=0.  The flag is owned by the backend registry
+(reliability/backend.py, DESIGN.md §12); `use_interpret` here is a shim.
 
 Kernels:
   diag_parity     — rotate-XOR diagonal-parity encode (ECC hot loop, §IV)
@@ -23,8 +24,4 @@ Kernels:
                     injection bit-exact vs the scan reference (§VI-A)
   flash_attention — online-softmax blocked attention (model hot loop)
 """
-import os
-
-
-def use_interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+from ..reliability.backend import use_interpret  # noqa: F401

@@ -1,8 +1,22 @@
-"""Serving driver: batched prefill + decode with optional TMR voting and
-soft-error injection (the paper's §V applied to model serving).
+"""Serving driver: batched prefill + decode under a composable protection
+scheme (the paper's §IV/§V applied to model serving; DESIGN.md §12).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
-      --batch 4 --prompt-len 64 --gen 32 --tmr serial --inject-p-bit 1e-4
+      --batch 4 --prompt-len 64 --gen 32 --scheme tmr-serial --inject-p-bit 1e-4
+
+`--scheme` accepts ``off | ecc | tmr-serial | tmr-parallel | tmr-semi |
+ecc+tmr[-<discipline>]`` (repro.reliability.parse_scheme grammar):
+
+* ``ecc``       — protect the weights with the diagonal-parity word code,
+                  corrupt, scrub once, serve the corrected store;
+* ``tmr-*``     — serve three independently corrupted copies and vote the
+                  generated token ids per-bit, under the selected paper
+                  discipline (serial / parallel / semi-parallel);
+* ``ecc+tmr-*`` — the joint long-term configuration: per-copy ECC scrub of
+                  the stores, then TMR voting over the three generations.
+
+The deprecated ``--tmr {off,serial,parallel,semi}`` flag remains as an
+alias for ``--scheme tmr-*``.
 """
 from __future__ import annotations
 
@@ -16,10 +30,11 @@ import numpy as np
 from ..configs import get_config, list_archs
 from ..faults import (FaultModel, RetentionDrift, StuckAtFaults,
                       TransientBitFlips)
-from ..kernels.tmr_vote import vote
 from ..models import params as P
 from ..models import transformer as T
 from ..models.steps import make_decode_step, make_prefill_step
+from ..reliability import (Compose, DiagParityEcc, Tmr, Unprotected,
+                           parse_scheme)
 
 
 def main() -> None:
@@ -29,15 +44,34 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--tmr", default="off", choices=["off", "serial", "parallel"])
+    ap.add_argument("--scheme", default=None,
+                    help="protection scheme spec: off | ecc | tmr-serial | "
+                         "tmr-parallel | tmr-semi | ecc+tmr[-<discipline>]")
+    ap.add_argument("--tmr", default=None,
+                    choices=["off", "serial", "parallel", "semi",
+                             "semi_parallel"],
+                    help="DEPRECATED alias for --scheme tmr-<discipline>")
     ap.add_argument("--inject-p-bit", type=float, default=0.0,
-                    help="corrupt each weight bit of each TMR copy w.p. p")
+                    help="corrupt each weight bit of each copy w.p. p")
     ap.add_argument("--fault", default="bitflip",
                     choices=["bitflip", "stuckat", "drift"],
                     help="fault model driving the per-copy corruption "
                          "(repro.faults taxonomy; rate = --inject-p-bit)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.scheme is not None and args.tmr is not None:
+        ap.error("--tmr is a deprecated alias for --scheme tmr-<discipline>;"
+                 " pass only one of them")
+    spec = args.scheme
+    if spec is None:
+        if args.tmr not in (None, "off"):
+            print(f"[serve] NOTE: --tmr {args.tmr} is deprecated; use "
+                  f"--scheme tmr-{args.tmr.replace('_', '-')}")
+            spec = f"tmr-{args.tmr.replace('_', '-')}"
+        else:
+            spec = "off"
+    scheme = parse_scheme(spec)
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -66,35 +100,65 @@ def main() -> None:
             toks.append(tok)
         return jnp.concatenate(toks, axis=1)
 
+    fault: FaultModel = {
+        "bitflip": TransientBitFlips(args.inject_p_bit),
+        "stuckat": StuckAtFaults(args.inject_p_bit / 2,
+                                 args.inject_p_bit / 2),
+        "drift": RetentionDrift(args.inject_p_bit),
+    }[args.fault]
+
+    def corrupt(i: int):
+        """Copy i's stored weights after an exposure interval."""
+        if not args.inject_p_bit:
+            return params
+        return fault.corrupt(params, jax.random.fold_in(key, 100 + i))
+
     t0 = time.time()
-    if args.tmr == "off":
-        out = run_copy(params)
-    else:
-        # three copies with independently injected storage corruption; per-bit
-        # majority voting on the generated token ids through the Pallas
-        # tmr_vote kernel (serial: sequential; parallel: 3 replica groups on
-        # a real mesh — same result here)
-        fault: FaultModel = {
-            "bitflip": TransientBitFlips(args.inject_p_bit),
-            "stuckat": StuckAtFaults(args.inject_p_bit / 2,
-                                     args.inject_p_bit / 2),
-            "drift": RetentionDrift(args.inject_p_bit),
-        }[args.fault]
-        copies = []
+    if isinstance(scheme, Unprotected):
+        # honest baseline for scheme sweeps: the unprotected store takes
+        # the same exposure as every protected scheme's copy 0
+        out = run_copy(corrupt(0))
+    elif isinstance(scheme, DiagParityEcc):
+        # short-term discipline: scrub the corrupted store, serve corrected
+        prot = scheme.protect(params)
+        prot, report = scheme.scrub(scheme.adopt(corrupt(0), prot.redundancy))
+        print(f"[serve] ecc scrub: corrected={int(report.corrected)} "
+              f"uncorrectable={int(report.uncorrectable)}")
+        out = run_copy(prot.payload)
+    elif isinstance(scheme, Tmr):
+        # three copies with independently injected storage corruption;
+        # per-bit majority voting on the generated token ids.  On this
+        # single-host driver all disciplines execute sequentially (same
+        # voted bits, no 3x peak memory from stacking full copies); on a
+        # real mesh parallel/semi-parallel shard the replica axis
+        out = scheme.wrap(run_copy, sequential=True)(
+            corrupt(0), corrupt(1), corrupt(2))
+    elif isinstance(scheme, Compose):
+        # the joint long-term configuration: per-copy ECC scrub, then TMR
+        # voting over the three generations
+        prot = scheme.ecc.protect(params)
+        copies, counts = [], [0, 0]
         for i in range(3):
-            p = params
-            if args.inject_p_bit:
-                p = fault.corrupt(params, jax.random.fold_in(key, 100 + i))
-            copies.append(run_copy(p))
-        out = vote(*copies)
+            fixed, rep = scheme.ecc.scrub(
+                scheme.ecc.adopt(corrupt(i), prot.redundancy))
+            counts[0] += int(rep.corrected)
+            counts[1] += int(rep.uncorrectable)
+            copies.append(fixed.payload)
+        print(f"[serve] ecc scrub (3 copies): corrected={counts[0]} "
+              f"uncorrectable={counts[1]}")
+        out = scheme.tmr.wrap(run_copy, sequential=True)(*copies)
+    else:
+        raise ValueError(f"unhandled scheme {scheme!r}")
     dt = time.time() - t0
 
-    ref = run_copy(params) if (args.tmr != "off" and args.inject_p_bit) else out
+    ref = run_copy(params) if args.inject_p_bit else out
     agree = float((out == ref).mean())
     tok_s = args.batch * args.gen / dt
-    print(f"[serve] {cfg.name} tmr={args.tmr} p_bit={args.inject_p_bit:g}: "
-          f"{args.batch}x{args.gen} tokens in {dt:.1f}s ({tok_s:.1f} tok/s), "
+    print(f"[serve] {cfg.name} scheme={scheme.name} "
+          f"p_bit={args.inject_p_bit:g}: {args.batch}x{args.gen} tokens "
+          f"in {dt:.1f}s ({tok_s:.1f} tok/s), "
           f"agreement with clean run: {agree:.3f}")
+    print(f"[serve] cost model ({scheme.name}): {scheme.overhead().describe()}")
     print("[serve] sample:", np.asarray(out[0, :16]).tolist())
 
 

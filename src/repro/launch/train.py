@@ -26,6 +26,7 @@ from ..models import transformer as T
 from ..models.steps import init_train_state, make_train_step
 from ..optim import AdamWConfig
 from ..pshard import DEFAULT_RULES, use_mesh_and_rules
+from ..reliability import SCHEME_CHOICES, Unprotected, parse_scheme
 from ..runtime import LoopConfig, TrainLoop
 
 
@@ -67,10 +68,11 @@ def build(args):
                           checkpoint_every=args.checkpoint_every,
                           scrub_every=args.ecc_scrub_every,
                           log_every=args.log_every,
-                          inject_p_bit=args.inject_p_bit)
+                          inject_p_bit=args.inject_p_bit,
+                          scheme=parse_scheme(args.scheme))
     loop = TrainLoop(train_step, state, batch_at, loop_cfg, ckpt=ckpt)
-    if args.ecc_scrub_every:
-        loop.attach_ecc()
+    if args.ecc_scrub_every and not isinstance(loop_cfg.scheme, Unprotected):
+        loop.attach_scheme()
     return cfg, loop, n_params
 
 
@@ -91,6 +93,11 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--ecc-scrub-every", type=int, default=0)
+    ap.add_argument("--scheme", default="ecc",
+                    help="protection scheme armed when --ecc-scrub-every > 0 "
+                         "(repro.reliability.parse_scheme grammar, e.g. "
+                         + " | ".join(SCHEME_CHOICES)
+                         + " | ecc+tmr-semi; DESIGN.md §12)")
     ap.add_argument("--inject-p-bit", type=float, default=0.0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")

@@ -1,0 +1,27 @@
+"""`repro.reliability` — the unified protection API (DESIGN.md §12).
+
+Two layers:
+
+  backend.py — ONE registry for every dispatchable op (diag_parity,
+               inject_scrub, tmr_vote, netlist_exec, crossbar_nor), with a
+               per-call ``impl=`` override and the ``REPRO_IMPL`` env var.
+               Subsumes the old ``ReliableStore(backend=...)``, the legacy
+               netlist-engine env var and per-module interpret plumbing.
+  scheme.py  — the composable `Scheme` protocol (`Unprotected`,
+               `DiagParityEcc`, `Tmr` in all three paper disciplines,
+               `Compose`) over `Protected` pytree stores.
+
+Consumers: `runtime.loop.LoopConfig.scheme`, `launch.serve --scheme`,
+`faults.campaign.sweep_schemes`, and the benchmark grid sweeps.
+"""
+from . import backend
+from .scheme import (SCHEME_CHOICES, Compose, CostReport, DiagParityEcc,
+                     Protected, Scheme, Tmr, Unprotected, parse_scheme,
+                     standard_grid)
+
+__all__ = [
+    "backend",
+    "Scheme", "Protected", "CostReport",
+    "Unprotected", "DiagParityEcc", "Tmr", "Compose",
+    "parse_scheme", "SCHEME_CHOICES", "standard_grid",
+]

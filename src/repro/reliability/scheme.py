@@ -1,0 +1,472 @@
+"""Composable protection schemes — the single public API (DESIGN.md §12).
+
+The paper's point (§V–§VI) is that diagonal-parity ECC and TMR are not
+alternatives but a *design space*: ECC for short-term scrubbing, TMR
+disciplines for long-term protection, and joint configurations evaluated
+together on NN workloads.  This module expresses that space as one small
+protocol so every consumer — train loop, serving, fault campaigns,
+benchmarks — can sweep protection schemes instead of hard-coding one:
+
+    scheme = parse_scheme("ecc+tmr-serial")
+    prot   = scheme.protect(params)          # Protected pytree node
+    prot, report = scheme.scrub(prot)        # verify/correct redundancy
+    prot   = scheme.refresh(new_params)      # after a parameter rewrite
+    params = scheme.read(prot)               # decode/vote the payload
+    cost   = scheme.overhead()               # CostReport (paper §IV/§V)
+
+Schemes: `Unprotected`, `DiagParityEcc` (the arena-backed §IV word code),
+`Tmr` with all three paper disciplines (serial / parallel / semi-parallel),
+and `Compose(ecc, tmr)` for the joint long-term configurations.  Each is a
+frozen dataclass (hashable — usable as a static jit argument and as pytree
+aux data) and every array op dispatches through the backend registry
+(`reliability.backend`), so ``impl=`` / ``REPRO_IMPL`` select kernel vs jnp
+paths uniformly.
+
+`Protected` is a registered pytree node carrying payload + redundancy +
+scheme metadata, so it flows through `jit`, `vmap` and the checkpointer
+unchanged.  All schemes are bit-exact against the pre-redesign
+`ReliableStore` / `core.tmr` paths (golden tests in tests/test_scheme.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import arena
+from ..core.reliability import ScrubReport
+from ..core.tmr import TMR_COSTS
+from . import backend
+
+__all__ = ["CostReport", "Protected", "Scheme", "Unprotected",
+           "DiagParityEcc", "Tmr", "Compose", "parse_scheme",
+           "SCHEME_CHOICES", "standard_grid"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CostReport:
+    """Protection overheads relative to the unprotected baseline.
+
+    storage_x counts held redundancy (parity words, extra copies);
+    latency/area/throughput follow the paper's §IV/§V accounting.
+    """
+    storage_x: float = 1.0
+    latency_x: float = 1.0
+    area_x: float = 1.0
+    throughput_x: float = 1.0
+
+    def describe(self) -> str:
+        return (f"storage={self.storage_x:.3f}x latency={self.latency_x:.2f}x "
+                f"area={self.area_x:.0f}x throughput={self.throughput_x:.2f}x")
+
+
+@jax.tree_util.register_pytree_node_class
+class Protected:
+    """A protected parameter pytree: payload + scheme-specific redundancy.
+
+    Registered pytree node — children are (payload, redundancy), aux data is
+    the (hashable, frozen) scheme — so a Protected store crosses `jit`,
+    `vmap` and `Checkpointer.save/restore` boundaries unchanged.  The
+    `_packed` attribute is a best-effort (arena, spec) cache for the payload
+    as stored; it is dropped by tree_flatten, so instances crossing a jit
+    boundary simply repack.
+    """
+
+    def __init__(self, payload: Any, redundancy: Any, scheme: "Scheme"):
+        self.payload = payload
+        self.redundancy = redundancy
+        self.scheme = scheme
+        self._packed: Optional[Tuple[jax.Array, arena.ArenaSpec]] = None
+
+    def read(self) -> Any:
+        return self.scheme.read(self)
+
+    def scrub(self) -> Tuple["Protected", ScrubReport]:
+        return self.scheme.scrub(self)
+
+    # pytree plumbing
+    def tree_flatten(self):
+        return (self.payload, self.redundancy), self.scheme
+
+    @classmethod
+    def tree_unflatten(cls, scheme, children):
+        return cls(children[0], children[1], scheme)
+
+    def __repr__(self) -> str:
+        return f"Protected(scheme={self.scheme.name})"
+
+
+def _zero_report() -> ScrubReport:
+    z = jnp.zeros((), jnp.int32)
+    return ScrubReport(corrected=z, parity_fixed=z, uncorrectable=z)
+
+
+def _sum_reports(reports) -> ScrubReport:
+    return ScrubReport(corrected=sum(r.corrected for r in reports),
+                       parity_fixed=sum(r.parity_fixed for r in reports),
+                       uncorrectable=sum(r.uncorrectable for r in reports))
+
+
+def _vote_counts(a: Any, b: Any, c: Any) -> Tuple[jax.Array, jax.Array]:
+    """(corrected, uncorrectable) word counts for a 3-copy vote, disjoint
+    like the ECC convention: `corrected` counts words where a majority
+    exists and the minority copy was repaired (each word once, however
+    many copies diverged); `uncorrectable` counts words where all three
+    copies pairwise differ — multiple independent corruptions landed on
+    the same word, so the per-bit majority may itself be wrong there (the
+    danger signal TMR can actually *detect*; a clean 2-of-3 double flip
+    is inherently silent)."""
+    corrected = jnp.zeros((), jnp.int32)
+    conflicts = jnp.zeros((), jnp.int32)
+    for x, y, z in zip(jax.tree.leaves(a), jax.tree.leaves(b),
+                       jax.tree.leaves(c)):
+        xw, yw, zw = (arena.leaf_to_words(v) for v in (x, y, z))
+        d01, d02, d12 = xw != yw, xw != zw, yw != zw
+        conflict = d01 & d02 & d12
+        corrected = corrected + ((d01 | d02 | d12)
+                                 & ~conflict).sum(dtype=jnp.int32)
+        conflicts = conflicts + conflict.sum(dtype=jnp.int32)
+    return corrected, conflicts
+
+
+class Scheme:
+    """Protection-scheme protocol.  Subclasses are frozen dataclasses."""
+
+    @property
+    def name(self) -> str:
+        raise NotImplementedError
+
+    def protect(self, payload: Any) -> Protected:
+        raise NotImplementedError
+
+    def refresh(self, payload: Any) -> Protected:
+        """Re-protect after the payload was rewritten (optimizer step)."""
+        return self.protect(payload)
+
+    def adopt(self, payload: Any, redundancy: Any) -> Protected:
+        """Rebuild a Protected from externally stored payload+redundancy
+        (checkpoint restore) without re-encoding."""
+        return Protected(payload, redundancy, self)
+
+    def scrub(self, prot: Protected) -> Tuple[Protected, ScrubReport]:
+        raise NotImplementedError
+
+    def read(self, prot: Protected) -> Any:
+        """Decode/vote the protected payload back to a plain pytree."""
+        return prot.payload
+
+    def corrupt_store(self, prot: Protected, model, key: jax.Array,
+                      dt: float = 1.0) -> Protected:
+        """Inject storage faults into every held *data* copy (payload and,
+        for TMR-style schemes, the redundant copies — each under an
+        independent subkey), leaving parity tables untouched, matching the
+        paper's exposure model where check words are scrub-verified.
+        Campaign trials drive one exposure interval per call."""
+        return self.adopt(model.corrupt(prot.payload, key, dt),
+                          prot.redundancy)
+
+    def overhead(self) -> CostReport:
+        raise NotImplementedError
+
+    #: does the redundancy belong in a checkpoint?  True for compact parity
+    #: tables; False when redundancy is full copies (rebuilt on restore).
+    checkpoint_redundancy: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Unprotected(Scheme):
+    """No redundancy — the baseline every CostReport is relative to."""
+
+    @property
+    def name(self) -> str:
+        return "unprotected"
+
+    def protect(self, payload: Any) -> Protected:
+        return Protected(payload, None, self)
+
+    def scrub(self, prot: Protected) -> Tuple[Protected, ScrubReport]:
+        return prot, _zero_report()
+
+    def overhead(self) -> CostReport:
+        return CostReport()
+
+
+@dataclasses.dataclass(frozen=True)
+class DiagParityEcc(Scheme):
+    """Diagonal-parity word ECC over the packed arena (paper §IV).
+
+    Wraps the `core.arena` + `kernels/diag_parity` machinery behind the
+    scheme protocol; bit-exact against `core.reliability.ReliableStore`
+    (same pack, same encode, same fused scrub, same counts).  `impl`
+    overrides the `diag_parity` backend (None -> registry default).
+    """
+
+    slopes: Tuple[int, ...] = (1, 2, -1)
+    impl: Optional[str] = None
+
+    @property
+    def name(self) -> str:
+        return "ecc"
+
+    def _op(self):
+        return backend.dispatch("diag_parity", self.impl)
+
+    def protect(self, payload: Any) -> Protected:
+        buf, spec = arena.pack(payload)
+        parity = self._op().encode(buf, slopes=self.slopes)
+        prot = Protected(payload, parity, self)
+        prot._packed = (buf, spec)
+        return prot
+
+    def scrub(self, prot: Protected) -> Tuple[Protected, ScrubReport]:
+        buf, spec = prot._packed if prot._packed is not None \
+            else arena.pack(prot.payload)
+        fixed, par2, counts = self._op().scrub(buf, prot.redundancy,
+                                               slopes=self.slopes)
+        out = Protected(arena.unpack(fixed, spec), par2, self)
+        out._packed = (fixed, spec)
+        report = ScrubReport(corrected=counts[0], parity_fixed=counts[1],
+                             uncorrectable=counts[2])
+        return out, report
+
+    def overhead(self) -> CostReport:
+        # storage: len(slopes) parity words per 32-word block; latency: the
+        # paper's ~26% average ECC overhead with the dedicated extension
+        return CostReport(storage_x=1.0 + len(self.slopes) / arena.BLOCK,
+                          latency_x=1.26)
+
+    checkpoint_redundancy = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Tmr(Scheme):
+    """Triple modular redundancy with per-bit voting (paper §V).
+
+    All three paper disciplines are selectable — 'serial' (3x latency),
+    'parallel' (3x area) and 'semi_parallel' (1/3 throughput) — with
+    identical output semantics: the discipline changes the execution shape
+    of `wrap()` and the `overhead()` accounting, never the voted bits.
+    Voting dispatches through the `tmr_vote` backend (kernel | jnp).
+    """
+
+    discipline: str = "serial"
+    impl: Optional[str] = None
+
+    def __post_init__(self):
+        if self.discipline not in TMR_COSTS:
+            raise ValueError(f"discipline must be one of {sorted(TMR_COSTS)}")
+
+    @property
+    def name(self) -> str:
+        return f"tmr-{self.discipline.replace('_', '-')}"
+
+    def _vote(self):
+        return backend.dispatch("tmr_vote", self.impl)
+
+    def protect(self, payload: Any) -> Protected:
+        # three copies; as immutable jax arrays they alias until corrupted
+        return Protected(payload, (payload, payload), self)
+
+    def read(self, prot: Protected) -> Any:
+        vote = self._vote()
+        c1, c2 = prot.redundancy
+        return jax.tree.map(vote, prot.payload, c1, c2)
+
+    def scrub(self, prot: Protected) -> Tuple[Protected, ScrubReport]:
+        voted = self.read(prot)
+        c1, c2 = prot.redundancy
+        # three-way disagreements feed the runtime's RESTART path — the
+        # voted word is best-effort there, like an ECC uncorrectable block
+        corrected, conflicts = _vote_counts(prot.payload, c1, c2)
+        report = ScrubReport(corrected=corrected,
+                             parity_fixed=jnp.zeros((), jnp.int32),
+                             uncorrectable=conflicts)
+        return Protected(voted, (voted, voted), self), report
+
+    def corrupt_store(self, prot: Protected, model, key: jax.Array,
+                      dt: float = 1.0) -> Protected:
+        c1, c2 = prot.redundancy
+        k0, k1, k2 = jax.random.split(key, 3)
+        return self.adopt(model.corrupt(prot.payload, k0, dt),
+                          (model.corrupt(c1, k1, dt),
+                           model.corrupt(c2, k2, dt)))
+
+    def wrap(self, serve_fn, sequential: bool = False):
+        """TMR-voted serving: `serve_fn(params, *inputs) -> pytree`, called
+        as wrapped(p1, p2, p3, *inputs) with per-copy parameter versions.
+
+        serial: three sequential evaluations; parallel/semi_parallel: one
+        vmapped evaluation over the stacked replica axis (on a real mesh
+        the axis is sharded over 3 replica groups for 'parallel', folded
+        into the row/batch capacity for 'semi_parallel').  The voted bits
+        are identical either way, so ``sequential=True`` forces the
+        serial execution shape regardless of discipline — for single-host
+        drivers where stacking three full copies would 3x peak memory —
+        while `cost` keeps reporting the discipline's accounting.
+        """
+        vote = self._vote()
+
+        def serial(p1, p2, p3, *inputs):
+            outs = [serve_fn(p, *inputs) for p in (p1, p2, p3)]
+            return jax.tree.map(vote, *outs)
+
+        def replicated(p1, p2, p3, *inputs):
+            stacked = jax.tree.map(lambda a, b, c: jnp.stack([a, b, c]),
+                                   p1, p2, p3)
+            outs = jax.vmap(lambda p: serve_fn(p, *inputs))(stacked)
+            o1, o2, o3 = (jax.tree.map(lambda x, i=i: x[i], outs)
+                          for i in range(3))
+            return jax.tree.map(vote, o1, o2, o3)
+
+        wrapped = serial if (sequential or self.discipline == "serial") \
+            else replicated
+        wrapped.cost = self.overhead()
+        return wrapped
+
+    def overhead(self) -> CostReport:
+        c = TMR_COSTS[self.discipline]
+        return CostReport(storage_x=3.0, latency_x=c.latency_x,
+                          area_x=c.area_x, throughput_x=c.throughput_x)
+
+
+@dataclasses.dataclass(frozen=True)
+class Compose(Scheme):
+    """Joint configuration: per-copy diagonal-parity ECC under TMR voting
+    (the paper's combined long-term protection, §VI).
+
+    Each of the three copies carries its own parity table; `scrub` first
+    runs the fused ECC scrub on every copy (correcting all single-bit
+    flips per block), then votes per-bit across the scrubbed copies — so
+    blocks the word code flags uncorrectable are still recovered whenever
+    at least two copies agree.  The report sums the three per-copy ECC
+    corrected/parity_fixed counts plus the voted word repairs; its
+    `uncorrectable` counts only words still three-way-disagreeing AFTER
+    the per-copy scrub (per-copy ECC uncorrectables that the vote
+    recovers are demoted to corrections — they no longer trigger the
+    runtime's checkpoint-restore path).
+    """
+
+    ecc: DiagParityEcc = DiagParityEcc()
+    tmr: Tmr = Tmr()
+
+    @property
+    def name(self) -> str:
+        return f"{self.ecc.name}+{self.tmr.name}"
+
+    def protect(self, payload: Any) -> Protected:
+        buf, spec = arena.pack(payload)
+        parity = self.ecc._op().encode(buf, slopes=self.ecc.slopes)
+        prot = Protected(payload, ((payload, payload),
+                                   (parity, parity, parity)), self)
+        prot._packed = (buf, spec)
+        return prot
+
+    def read(self, prot: Protected) -> Any:
+        (c1, c2), _ = prot.redundancy
+        vote = self.tmr._vote()
+        return jax.tree.map(vote, prot.payload, c1, c2)
+
+    def scrub(self, prot: Protected) -> Tuple[Protected, ScrubReport]:
+        # scrub and vote directly on the packed arenas: all three copies
+        # share one layout, so the vote is three uint32 buffers through the
+        # tmr_vote backend and only the voted result is unpacked once
+        (c1, c2), (p0, p1, p2) = prot.redundancy
+        op = self.ecc._op()
+        bufs, reports = [], []
+        spec = None
+        for i, (copy, par) in enumerate(((prot.payload, p0), (c1, p1),
+                                         (c2, p2))):
+            buf, spec = prot._packed if i == 0 and prot._packed is not None \
+                else arena.pack(copy)
+            buf2, par2, counts = op.scrub(buf, par, slopes=self.ecc.slopes)
+            bufs.append(buf2)
+            reports.append(ScrubReport(corrected=counts[0],
+                                       parity_fixed=counts[1],
+                                       uncorrectable=counts[2]))
+        vbuf = self.tmr._vote()(*bufs)
+        voted = arena.unpack(vbuf, spec)
+        vpar = op.encode(vbuf, slopes=self.ecc.slopes)
+        out = Protected(voted, ((voted, voted), (vpar, vpar, vpar)), self)
+        out._packed = (vbuf, spec)
+        d01, d02, d12 = (bufs[0] != bufs[1], bufs[0] != bufs[2],
+                         bufs[1] != bufs[2])
+        conflict = d01 & d02 & d12
+        ecc_sum = _sum_reports(reports)
+        report = ScrubReport(
+            corrected=ecc_sum.corrected
+            + ((d01 | d02 | d12) & ~conflict).sum(dtype=jnp.int32),
+            parity_fixed=ecc_sum.parity_fixed,
+            uncorrectable=conflict.sum(dtype=jnp.int32))
+        return out, report
+
+    def corrupt_store(self, prot: Protected, model, key: jax.Array,
+                      dt: float = 1.0) -> Protected:
+        (c1, c2), parities = prot.redundancy
+        k0, k1, k2 = jax.random.split(key, 3)
+        return self.adopt(model.corrupt(prot.payload, k0, dt),
+                          ((model.corrupt(c1, k1, dt),
+                            model.corrupt(c2, k2, dt)), parities))
+
+    def overhead(self) -> CostReport:
+        e, t = self.ecc.overhead(), self.tmr.overhead()
+        return CostReport(storage_x=e.storage_x * t.storage_x,
+                          latency_x=e.latency_x * t.latency_x,
+                          area_x=e.area_x * t.area_x,
+                          throughput_x=e.throughput_x * t.throughput_x)
+
+
+# --------------------------------------------------------------------------
+# scheme spec strings (serve --scheme, campaign grids)
+# --------------------------------------------------------------------------
+
+SCHEME_CHOICES = ("off", "ecc", "tmr-serial", "tmr-parallel", "tmr-semi",
+                  "ecc+tmr")
+
+_TMR_ALIASES = {"serial": "serial", "parallel": "parallel",
+                "semi": "semi_parallel", "semi-parallel": "semi_parallel",
+                "semi_parallel": "semi_parallel"}
+
+
+def _parse_one(token: str, impl: Optional[str]) -> Scheme:
+    token = token.strip().lower()
+    if token in ("off", "none", "unprotected"):
+        return Unprotected()
+    if token == "ecc":
+        return DiagParityEcc(impl=impl)
+    if token == "tmr" or token.startswith("tmr-"):
+        disc = _TMR_ALIASES.get(token[4:] or "serial")
+        if disc is None:
+            raise ValueError(f"unknown TMR discipline {token[4:]!r} "
+                             f"(expected one of {sorted(_TMR_ALIASES)})")
+        return Tmr(discipline=disc, impl=impl)
+    raise ValueError(f"unknown scheme {token!r} "
+                     f"(expected one of {SCHEME_CHOICES})")
+
+
+def standard_grid(impl: Optional[str] = None) -> Tuple[Scheme, ...]:
+    """The canonical sweep grid (every scheme family, all disciplines) —
+    shared by the campaign benchmarks so they all walk one design space."""
+    return (Unprotected(), DiagParityEcc(impl=impl),
+            Tmr("serial", impl=impl), Tmr("parallel", impl=impl),
+            Tmr("semi_parallel", impl=impl),
+            Compose(DiagParityEcc(impl=impl), Tmr("serial", impl=impl)))
+
+
+def parse_scheme(spec: str, impl: Optional[str] = None) -> Scheme:
+    """Parse a scheme spec string: ``off | ecc | tmr-<discipline> |
+    ecc+tmr[-<discipline>]`` with discipline in serial | parallel | semi.
+
+    `impl` threads a backend override into every constructed scheme.
+    """
+    parts = [_parse_one(t, impl) for t in spec.split("+")]
+    if len(parts) == 1:
+        return parts[0]
+    if len(parts) == 2:
+        eccs = [p for p in parts if isinstance(p, DiagParityEcc)]
+        tmrs = [p for p in parts if isinstance(p, Tmr)]
+        if len(eccs) == 1 and len(tmrs) == 1:
+            return Compose(ecc=eccs[0], tmr=tmrs[0])
+    raise ValueError(f"cannot compose scheme spec {spec!r} "
+                     "(expected ecc+tmr[-<discipline>])")

@@ -2,18 +2,19 @@
 
 Composes the substrates: data prefetch, jit'd train step, periodic
 checkpointing, heartbeat/straggler monitoring, and the paper's reliability
-layer — the arena-backed scrub engine (core/reliability.py) verifying the
-parameter store between steps and injected soft errors for validation.
+layer — a composable protection `Scheme` (repro.reliability, DESIGN.md §12)
+verifying the parameter store between steps under injected soft errors.
 
-Scrub scheduling is interval-based: parity is refreshed after every
-parameter write (one fused encode launch over the packed arena) and every
-`scrub_every` steps the fused scrub kernel verifies/corrects the store.
-Each ScrubReport feeds two consumers: the HeartbeatMonitor (an
-uncorrectable block returns Decision.RESTART, which triggers a checkpoint
-restore) and a core.analytics.ScrubTrajectory (observed correction stream
-vs the closed-form model).  `run()` survives (simulated) preemptions by
-restoring the latest checkpoint and replaying the data stream from the step
-counter (the synthetic pipeline is deterministic in step).
+Scheme scheduling is interval-based: redundancy is refreshed after every
+parameter write (for `DiagParityEcc` that is one fused encode launch over
+the packed arena) and every `scrub_every` steps `scheme.scrub` verifies and
+corrects the store.  Each ScrubReport feeds two consumers: the
+HeartbeatMonitor (an uncorrectable block returns Decision.RESTART, which
+triggers a checkpoint restore) and a core.analytics.ScrubTrajectory
+(observed correction stream vs the closed-form model).  `run()` survives
+(simulated) preemptions by restoring the latest checkpoint and replaying
+the data stream from the step counter (the synthetic pipeline is
+deterministic in step).
 """
 from __future__ import annotations
 
@@ -25,9 +26,13 @@ import jax
 import numpy as np
 
 from ..checkpoint import Checkpointer
+from ..core import arena
 from ..core.analytics import ScrubTrajectory
 from ..core.reliability import ReliableStore, WordEccConfig
 from ..faults.models import FaultModel, TransientBitFlips
+from ..reliability import backend
+from ..reliability.scheme import (DiagParityEcc, Protected, Scheme,
+                                  parse_scheme)
 from .monitor import Decision, HeartbeatMonitor, StragglerPolicy
 
 __all__ = ["LoopConfig", "TrainLoop"]
@@ -37,14 +42,17 @@ __all__ = ["LoopConfig", "TrainLoop"]
 class LoopConfig:
     total_steps: int = 100
     checkpoint_every: int = 50
-    scrub_every: int = 0          # 0 = ECC scrubbing disabled
+    scrub_every: int = 0          # 0 = scheme scrubbing disabled
     log_every: int = 10
     inject_p_bit: float = 0.0     # simulated indirect soft-error rate per scrub interval
     inject_seed: int = 0
     fault_model: Optional[FaultModel] = None  # overrides inject_p_bit: any
                                   # repro.faults model drives the injection
-    ecc_backend: str = "kernel"   # "kernel" (fused Pallas scrub) or "jnp"
-    max_scrub_restores: int = 3   # consecutive ECC restores before giving up
+    scheme: Optional[Scheme] = None  # protection scheme (repro.reliability);
+                                  # None -> DiagParityEcc() on attach_scheme()
+    ecc_backend: Optional[str] = None  # DEPRECATED: impl override for the
+                                  # default DiagParityEcc; use scheme= instead
+    max_scrub_restores: int = 3   # consecutive scheme restores before giving up
                                   # and continuing with best-effort correction
 
 
@@ -62,7 +70,8 @@ class TrainLoop:
         self.monitor = monitor or HeartbeatMonitor()
         self.log = log
         self.step = 0
-        self.store: Optional[ReliableStore] = None   # ECC store (params + arena parity)
+        self.scheme: Optional[Scheme] = None         # active protection scheme
+        self.protected: Optional[Protected] = None   # scheme-wrapped params
         self.inject_fn = inject_fn    # deterministic corruptor hook (tests)
         self.metrics_history: list = []
         self.scrub_reports: list = []
@@ -71,61 +80,108 @@ class TrainLoop:
         self._consecutive_scrub_restores = 0
 
     # -- reliability hooks -----------------------------------------------------
-    # Protocol (paper §IV adapted): parity is refreshed after every parameter
-    # write (the optimizer step == the mMPU "function output"); scrubbing
-    # verifies/corrects accumulated storage flips between refreshes.  Both
-    # are single fused launches over the packed arena.
+    # Protocol (paper §IV adapted): redundancy is refreshed after every
+    # parameter write (the optimizer step == the mMPU "function output");
+    # scrubbing verifies/corrects accumulated storage flips between
+    # refreshes.  For DiagParityEcc both are single fused launches over the
+    # packed arena; TMR/Compose schemes vote across held copies instead.
     @property
     def parity(self):
-        return self.store.parity if self.store is not None else None
+        if self.protected is not None and self.scheme.checkpoint_redundancy:
+            return self.protected.redundancy
+        return None
+
+    @property
+    def store(self) -> Optional[ReliableStore]:
+        """DEPRECATED back-compat view: the ECC store as a ReliableStore.
+
+        Only meaningful for `DiagParityEcc`-protected loops (None
+        otherwise); scrubbing the view is bit-exact vs `scheme.scrub` —
+        both run the same fused pass over the same arena+parity.
+        """
+        if self.protected is None or not isinstance(self.scheme, DiagParityEcc):
+            return None
+        s = ReliableStore(self.protected.payload, self.protected.redundancy,
+                          WordEccConfig(self.scheme.slopes),
+                          backend.resolve("diag_parity", self.scheme.impl))
+        s._packed = self.protected._packed
+        return s
+
+    def _default_scheme(self) -> Scheme:
+        if self.cfg.scheme is not None:
+            return self.cfg.scheme
+        return DiagParityEcc(impl=self.cfg.ecc_backend)
+
+    def attach_scheme(self, scheme: Optional[Scheme] = None) -> None:
+        """Arm the protection scheme over the current parameter store."""
+        self.scheme = scheme or self._default_scheme()
+        self.protected = self.scheme.protect(self.state["params"])
+        self.scrub_trajectory.n_blocks = self._n_blocks()
 
     def attach_ecc(self) -> None:
-        self.store = ReliableStore.protect(self.state["params"],
-                                           backend=self.cfg.ecc_backend)
-        self.scrub_trajectory.n_blocks = self.store.n_blocks
+        """DEPRECATED shim for attach_scheme() (historic ECC-only entry)."""
+        self.attach_scheme()
 
-    def _refresh_parity(self) -> None:
-        if self.store is not None:
-            self.store = self.store.refresh(self.state["params"])
+    def _n_blocks(self) -> int:
+        return arena.arena_spec(self.state["params"]).n_blocks
 
-    def _corrupt(self, params: Any) -> Any:
-        if self.inject_fn is not None:
-            return self.inject_fn(params, self.step)
+    def _refresh(self) -> None:
+        if self.protected is not None:
+            self.protected = self.scheme.refresh(self.state["params"])
+
+    def _inject_key(self, model: FaultModel) -> jax.Array:
+        if model.permanent:
+            # defect maps are device properties: one stable key for the
+            # whole run, or the "permanent" faults would relocate every
+            # scrub interval (and survive restores, correctly)
+            return jax.random.PRNGKey(self.cfg.inject_seed)
+        # fold the restore count in: real soft errors do not replay, so a
+        # post-restore replay of this step must draw fresh flips (else an
+        # uncorrectable draw would recur identically and livelock the run)
+        return jax.random.fold_in(
+            jax.random.PRNGKey(self.cfg.inject_seed + self.step),
+            self.total_restores)
+
+    def _resolved_model(self) -> Optional[FaultModel]:
         model = self.cfg.fault_model
         if model is None and self.cfg.inject_p_bit > 0:
             model = TransientBitFlips(self.cfg.inject_p_bit)
-        if model is not None:
-            if model.permanent:
-                # defect maps are device properties: one stable key for the
-                # whole run, or the "permanent" faults would relocate every
-                # scrub interval (and survive restores, correctly)
-                key = jax.random.PRNGKey(self.cfg.inject_seed)
-            else:
-                # fold the restore count in: real soft errors do not replay,
-                # so a post-restore replay of this step must draw fresh flips
-                # (else an uncorrectable draw would recur identically and
-                # livelock the run)
-                key = jax.random.fold_in(
-                    jax.random.PRNGKey(self.cfg.inject_seed + self.step),
-                    self.total_restores)
-            # dt=1: one model time unit == one scrub interval (inject_p_bit
-            # has always been a per-scrub-interval rate)
-            return model.corrupt(params, key, dt=1.0)
-        return params
+        return model
 
-    def _scrub(self) -> bool:
-        """One fused scrub pass; returns True if a restore rolled back the
-        step counter (the caller must not finish the current iteration)."""
+    def _corrupt(self, params: Any) -> Any:
+        """One interval's exposure applied to a plain pytree (key semantics
+        shared with _corrupted_store; kept as the single-copy surface)."""
+        model = self._resolved_model()
+        if model is None:
+            return params
+        # dt=1: one model time unit == one scrub interval (inject_p_bit
+        # has always been a per-scrub-interval rate)
+        return model.corrupt(params, self._inject_key(model), dt=1.0)
+
+    def _corrupted_store(self) -> Protected:
+        """The protected store after this interval's simulated exposure."""
         params = self.state["params"]
-        corrupted = self._corrupt(params)
-        if corrupted is params:
+        if self.inject_fn is not None:
+            # deterministic test hook: corrupts the payload copy only
+            corrupted = self.inject_fn(params, self.step)
+            if corrupted is params:
+                return self.protected
+            return self.scheme.adopt(corrupted, self.protected.redundancy)
+        model = self._resolved_model()
+        if model is None:
             # no injection: scrub the just-refreshed store, reusing its
             # cached packed arena instead of packing the pytree again
-            store = self.store
-        else:
-            store = ReliableStore(corrupted, self.store.parity,
-                                  self.store.cfg, self.store.backend)
-        fixed, report = store.scrub()
+            return self.protected
+        # corrupt EVERY held data copy (copy-based schemes draw independent
+        # subkeys per copy, so TMR double-faults and uncorrectable words are
+        # actually reachable); dt as in _corrupt
+        return self.scheme.corrupt_store(self.protected, model,
+                                         self._inject_key(model), dt=1.0)
+
+    def _scrub(self) -> bool:
+        """One scheme scrub pass; returns True if a restore rolled back the
+        step counter (the caller must not finish the current iteration)."""
+        fixed, report = self.scheme.scrub(self._corrupted_store())
         self.scrub_reports.append((self.step, report))
         self.scrub_trajectory.add(self.step, int(report.corrected),
                                   int(report.parity_fixed),
@@ -148,16 +204,22 @@ class TrainLoop:
                      f"with best-effort corrected params")
         else:
             self._consecutive_scrub_restores = 0
-        self.state = dict(self.state, params=fixed.params)
-        self.store = fixed
+        self.state = dict(self.state, params=fixed.payload)
+        self.protected = fixed
         return False
 
     # -- checkpoint/restore ------------------------------------------------------
     def save(self) -> None:
         if self.ckpt is not None:
             snap = {"state": self.state, "step": self.step}
-            if self.store is not None:
-                snap["parity"] = self.store.parity
+            if self.protected is not None:
+                # scheme-name marker: lets a fresh process re-arm copy-based
+                # schemes whose redundancy is rebuilt from params (no parity
+                # table to detect them by)
+                snap["scheme"] = self.scheme.name
+            parity = self.parity
+            if parity is not None:
+                snap["parity"] = parity
             self.ckpt.save(self.step, snap)
 
     def restore(self) -> bool:
@@ -172,28 +234,43 @@ class TrainLoop:
         self.state = jax.tree.map(jax.numpy.asarray, snap["state"])
         self.total_restores += 1
         if "parity" in snap:
-            # a parity table in the snapshot means the saving run had ECC
-            # attached — re-arm it even in a fresh process (store is None),
-            # or scrubbing would silently stop across preemption restarts.
-            # A legacy per-leaf parity pytree (pre-arena checkpoints) is not
-            # usable as the (n_blocks, F) table: re-encode from params.
+            # a parity table in the snapshot means the saving run had an ECC
+            # scheme attached — re-arm it even in a fresh process (scheme is
+            # None), or scrubbing would silently stop across preemption
+            # restarts.  A legacy per-leaf parity pytree (pre-arena
+            # checkpoints) is not usable as the (n_blocks, F) table:
+            # re-encode from params.
+            self.scheme = self.scheme or self._default_scheme()
             parity = snap["parity"]
-            if self.store is not None:
-                cfg, backend = self.store.cfg, self.store.backend
-            else:
-                cfg, backend = WordEccConfig(), self.cfg.ecc_backend
-            if hasattr(parity, "shape") and getattr(parity, "ndim", 0) == 2:
-                self.store = ReliableStore(self.state["params"],
-                                           jax.numpy.asarray(parity),
-                                           cfg, backend)
+            if not self.scheme.checkpoint_redundancy:
+                # the snapshot came from an ECC run but this loop runs a
+                # copy-based scheme: the parity table simply doesn't apply
+                self.log(f"[restore] snapshot parity ignored (current "
+                         f"scheme {self.scheme.name} rebuilds redundancy "
+                         f"from params)")
+                self.protected = self.scheme.protect(self.state["params"])
+            elif hasattr(parity, "shape") \
+                    and getattr(parity, "ndim", 0) == 2:
+                self.protected = self.scheme.adopt(
+                    self.state["params"], jax.numpy.asarray(parity))
             else:
                 self.log("[restore] legacy/unknown parity layout in snapshot;"
-                         " re-encoding from restored params")
-                self.store = ReliableStore.protect(self.state["params"],
-                                                   cfg, backend)
-            self.scrub_trajectory.n_blocks = self.store.n_blocks
-        elif self.store is not None:
-            self.store = self.store.refresh(self.state["params"])
+                         " re-protecting from restored params")
+                self.protected = self.scheme.protect(self.state["params"])
+            self.scrub_trajectory.n_blocks = self._n_blocks()
+        elif self.protected is not None:
+            self.protected = self.scheme.refresh(self.state["params"])
+        elif "scheme" in snap:
+            # the saving run had a copy-based scheme armed (no parity table
+            # in the snapshot) — re-arm it in this fresh process, or
+            # scrubbing would silently stop across preemption restarts
+            name = str(np.asarray(snap["scheme"]).item())
+            self.scheme = self.scheme or self.cfg.scheme \
+                or parse_scheme(name)
+            self.log(f"[restore] re-armed protection scheme "
+                     f"{self.scheme.name} (snapshot ran {name})")
+            self.protected = self.scheme.protect(self.state["params"])
+            self.scrub_trajectory.n_blocks = self._n_blocks()
         self.step = int(snap["step"])
         self.log(f"[restore] resumed from step {self.step}")
         return True
@@ -217,8 +294,8 @@ class TrainLoop:
                 loss = float(metrics.get("loss", metrics.get("total", np.nan)))
                 self.log(f"step {self.step:5d} loss {loss:.4f} ({dt:.3f}s)")
                 self.metrics_history.append((self.step, loss))
-            if self.store is not None:
-                self._refresh_parity()
+            if self.protected is not None:
+                self._refresh()
                 if c.scrub_every and self.step % c.scrub_every == 0:
                     if self._scrub():
                         continue   # restored: step rolled back, re-enter loop

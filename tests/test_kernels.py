@@ -180,7 +180,7 @@ def test_tmr_vote_sweep(shape, dtype):
         a = jax.random.randint(key, shape, -1000, 1000, jnp.int32)
     else:
         a = jax.random.normal(key, shape, dtype)
-    from repro.core.reliability import inject_bit_flips
+    from repro.faults import inject_bit_flips
     bad = inject_bit_flips(a, jax.random.fold_in(key, 1), 0.02)
     got = vote(a, bad, a)
     want = vote_ref(a, bad, a)

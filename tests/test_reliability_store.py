@@ -6,6 +6,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import reliability as R
+from repro.faults import inject_bit_flips
 
 
 def _words(seed, n_blocks=8):
@@ -59,7 +60,7 @@ def test_store_roundtrip_all_dtypes(key):
 def test_store_scrub_corrects_sparse_corruption(key, p_bit):
     params = {"w": jax.random.normal(key, (256, 33), jnp.float32)}
     store = R.ReliableStore.protect(params)
-    bad = R.inject_bit_flips(params, jax.random.fold_in(key, 9), p_bit)
+    bad = inject_bit_flips(params, jax.random.fold_in(key, 9), p_bit)
     fixed, rep = R.ReliableStore(bad, store.parity).scrub()
     if int(rep.uncorrectable) == 0:
         assert np.array_equal(np.asarray(fixed.params["w"]), np.asarray(params["w"]))
@@ -93,7 +94,7 @@ def test_odd_length_bf16_leaf_protect_flip_scrub(key):
 def test_store_backends_agree(key):
     params = {"a": jax.random.normal(key, (67, 5), jnp.float32),
               "b": jax.random.normal(jax.random.fold_in(key, 1), (77,), jnp.bfloat16)}
-    bad = R.inject_bit_flips(params, jax.random.fold_in(key, 2), 1e-4)
+    bad = inject_bit_flips(params, jax.random.fold_in(key, 2), 1e-4)
     parity = R.ReliableStore.protect(params).parity
     f_k, r_k = R.ReliableStore(bad, parity, backend="kernel").scrub()
     f_j, r_j = R.ReliableStore(bad, parity, backend="jnp").scrub()
@@ -107,7 +108,7 @@ def test_per_leaf_legacy_path_matches_arena(key):
     params = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i),
                                          (31 + i,), jnp.float32)
               for i in range(6)}
-    bad = R.inject_bit_flips(params, jax.random.fold_in(key, 99), 1e-4)
+    bad = inject_bit_flips(params, jax.random.fold_in(key, 99), 1e-4)
     ptree = R.protect_leaves(params)
     fixed_tree, _, rep_leaf = R.scrub_leaves(bad, ptree)
     store = R.ReliableStore.protect(params)

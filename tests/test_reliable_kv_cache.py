@@ -11,7 +11,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core.reliability import ReliableStore, inject_bit_flips
+from repro.core.reliability import ReliableStore
+from repro.faults import inject_bit_flips
 from repro.models import params as P
 from repro.models import transformer as T
 from repro.models.steps import make_decode_step, make_prefill_step

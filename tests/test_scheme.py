@@ -1,0 +1,406 @@
+"""Golden equivalence for the unified `repro.reliability` scheme API
+(DESIGN.md §12): every Scheme must be bit-exact against the pre-redesign
+`ReliableStore` / `core.tmr` paths, and `Protected` must survive jit, vmap
+and Checkpointer round-trips unchanged."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.core import reliability as R
+from repro.core import tmr as legacy_tmr
+from repro.faults import TransientBitFlips, inject_bit_flips
+from repro.reliability import (Compose, DiagParityEcc, Protected, Tmr,
+                               Unprotected, backend, parse_scheme,
+                               standard_grid)
+from repro.runtime import LoopConfig, TrainLoop
+
+
+def _params(key):
+    return {"a": jax.random.normal(key, (65, 7), jnp.float32),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (129,),
+                                   jnp.bfloat16),
+            "c": jax.random.randint(jax.random.fold_in(key, 2), (40,),
+                                    0, 100, jnp.int32)}
+
+
+def _tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        if not np.array_equal(np.asarray(x, np.float32),
+                              np.asarray(y, np.float32)):
+            return False
+    return True
+
+
+def _flip_word_bits(params, flips):
+    """Flip specific (index, bit) positions of leaf 'a' (float32)."""
+    u = jax.lax.bitcast_convert_type(params["a"], jnp.uint32).reshape(-1)
+    for idx, bit in flips:
+        u = u.at[idx].set(u[idx] ^ jnp.uint32(1 << bit))
+    return dict(params, a=jax.lax.bitcast_convert_type(
+        u.reshape(params["a"].shape), jnp.float32))
+
+
+# -- backend registry ---------------------------------------------------------
+
+def test_registry_resolution_order(monkeypatch):
+    assert backend.resolve("netlist_exec") == "level"
+    assert backend.resolve("diag_parity") == "kernel"
+    # per-call argument wins over everything
+    monkeypatch.setenv("REPRO_IMPL", "netlist_exec=kernel")
+    assert backend.resolve("netlist_exec", "scan") == "scan"
+    assert backend.resolve("netlist_exec") == "kernel"
+    # bare env token applies to every op that has the implementation
+    monkeypatch.setenv("REPRO_IMPL", "jnp")
+    assert backend.resolve("diag_parity") == "jnp"
+    assert backend.resolve("tmr_vote") == "jnp"
+    assert backend.resolve("netlist_exec") == "level"   # no jnp impl: default
+    # deprecated netlist env var still honored, REPRO_IMPL wins over it
+    monkeypatch.delenv("REPRO_IMPL")
+    monkeypatch.setenv("REPRO_NETLIST_IMPL", "scan")
+    assert backend.resolve("netlist_exec") == "scan"
+    monkeypatch.setenv("REPRO_IMPL", "netlist_exec=kernel")
+    assert backend.resolve("netlist_exec") == "kernel"
+    # ...including in its bare-token form
+    monkeypatch.setenv("REPRO_IMPL", "scan")
+    assert backend.resolve("netlist_exec") == "scan"
+
+
+def test_registry_rejects_unknown():
+    with pytest.raises(KeyError):
+        backend.resolve("no_such_op")
+    with pytest.raises(ValueError):
+        backend.resolve("diag_parity", "no_such_impl")
+
+
+def test_multpim_impl_dispatch_via_registry(monkeypatch, key):
+    from repro.core import multpim
+    a = jax.random.bits(key, (16,), jnp.uint32) & jnp.uint32(0xFF)
+    b = jax.random.bits(jax.random.fold_in(key, 1), (16,), jnp.uint32) \
+        & jnp.uint32(0xFF)
+    want = np.asarray(multpim.multiply_bits(a, b, 8, impl="scan"))
+    monkeypatch.setenv("REPRO_IMPL", "netlist_exec=level")
+    got = np.asarray(multpim.multiply_bits(a, b, 8))
+    np.testing.assert_array_equal(got, want)
+
+
+# -- DiagParityEcc vs ReliableStore (golden) ----------------------------------
+
+@pytest.mark.parametrize("impl", ["kernel", "jnp"])
+def test_ecc_protect_matches_reliable_store(key, impl):
+    params = _params(key)
+    store = R.ReliableStore.protect(params, backend=impl)
+    prot = DiagParityEcc(impl=impl).protect(params)
+    np.testing.assert_array_equal(np.asarray(prot.redundancy),
+                                  np.asarray(store.parity))
+
+
+@pytest.mark.parametrize("n_flips", [0, 1, 2])
+def test_ecc_scrub_bit_exact_vs_reliable_store(key, n_flips):
+    params = _params(key)
+    scheme = DiagParityEcc()
+    parity = scheme.protect(params).redundancy
+    # 0 / 1 / 2 flips in the same 32-word block: clean, corrected, and
+    # uncorrectable paths must all match the legacy store bit-for-bit
+    bad = _flip_word_bits(params, [(3, 5), (9, 21)][:n_flips])
+    f_old, r_old = R.ReliableStore(bad, parity).scrub()
+    f_new, r_new = scheme.scrub(scheme.adopt(bad, parity))
+    assert [int(v) for v in r_old] == [int(v) for v in r_new]
+    assert _tree_equal(f_old.params, f_new.payload)
+    expected = {0: (0, 0), 1: (1, 0), 2: (0, 1)}[n_flips]
+    assert (int(r_new.corrected), int(r_new.uncorrectable)) == expected
+    if n_flips < 2:
+        assert _tree_equal(f_new.payload, params)
+
+
+def test_ecc_sparse_corruption_backends_agree(key):
+    params = _params(key)
+    bad = inject_bit_flips(params, jax.random.fold_in(key, 9), 1e-4)
+    outs = []
+    for impl in ("kernel", "jnp"):
+        scheme = DiagParityEcc(impl=impl)
+        prot = scheme.protect(params)
+        fixed, rep = scheme.scrub(scheme.adopt(bad, prot.redundancy))
+        outs.append((fixed, rep))
+    (f_k, r_k), (f_j, r_j) = outs
+    assert [int(v) for v in r_k] == [int(v) for v in r_j]
+    assert _tree_equal(f_k.payload, f_j.payload)
+
+
+# -- Tmr vs core.tmr (golden) -------------------------------------------------
+
+@pytest.mark.parametrize("discipline", ["serial", "parallel", "semi_parallel"])
+def test_tmr_read_matches_legacy_vote(key, discipline):
+    x = jax.random.normal(key, (32, 8), jnp.float32)
+    bad = inject_bit_flips(x, jax.random.fold_in(key, 1), 0.05)
+    scheme = Tmr(discipline)
+    for copies in [(bad, x, x), (x, bad, x), (x, x, bad)]:
+        prot = scheme.adopt(copies[0], (copies[1], copies[2]))
+        want = legacy_tmr.vote_array(*copies)
+        np.testing.assert_array_equal(np.asarray(scheme.read(prot)),
+                                      np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(scheme.read(prot)),
+                                      np.asarray(x))
+
+
+def test_tmr_scrub_repairs_and_counts(key):
+    params = _params(key)
+    scheme = Tmr("serial")
+    bad = _flip_word_bits(params, [(3, 5), (9, 21)])   # 2 words corrupted
+    prot = scheme.adopt(bad, (params, params))
+    fixed, rep = scheme.scrub(prot)
+    assert _tree_equal(fixed.payload, params)
+    assert _tree_equal(fixed.redundancy[0], params)
+    assert int(rep.corrected) == 2                     # two repaired words
+    assert int(rep.uncorrectable) == 0
+
+
+def test_tmr_three_way_conflict_reports_uncorrectable(key):
+    """A word corrupted differently in ALL three copies may out-vote
+    wrong; that detectable conflict must surface as uncorrectable so the
+    train loop's RESTART path can fire (like an ECC-dead block)."""
+    params = _params(key)
+    scheme = Tmr("serial")
+    b0 = _flip_word_bits(params, [(3, 1)])
+    b1 = _flip_word_bits(params, [(3, 2)])
+    b2 = _flip_word_bits(params, [(3, 4)])
+    fixed, rep = scheme.scrub(scheme.adopt(b0, (b1, b2)))
+    assert int(rep.uncorrectable) == 1
+    # single-copy corruption stays conflict-free
+    _, rep2 = scheme.scrub(scheme.adopt(b0, (params, params)))
+    assert int(rep2.uncorrectable) == 0
+
+
+def test_tmr_serve_shim_all_disciplines(key):
+    """The deprecated tmr_serve shim exposes all three paper disciplines
+    end-to-end and votes identically to the legacy serial/parallel paths."""
+    x = jax.random.normal(key, (16, 4), jnp.float32)
+    bad = inject_bit_flips(x, jax.random.fold_in(key, 3), 0.05)
+
+    def serve_fn(p):
+        return p * 2.0
+
+    want = np.asarray(serve_fn(x))
+    for mode in ("serial", "parallel", "semi_parallel"):
+        wrapped = R.tmr_serve(serve_fn, mode=mode)
+        out = wrapped(bad, x, x)
+        np.testing.assert_array_equal(np.asarray(out), want, err_msg=mode)
+        assert wrapped.cost.throughput_x == \
+            pytest.approx(legacy_tmr.TMR_COSTS[mode].throughput_x)
+
+
+# -- Compose ------------------------------------------------------------------
+
+def test_compose_recovers_ecc_uncorrectable_block(key):
+    """Two flips in one block defeat the word code on one copy; the vote
+    across per-copy-scrubbed replicas must still recover the payload."""
+    params = _params(key)
+    scheme = Compose(DiagParityEcc(), Tmr("serial"))
+    prot = scheme.protect(params)
+    (c1, c2), pars = prot.redundancy
+    bad = _flip_word_bits(params, [(3, 5), (9, 21)])   # same ECC block
+    corrupted = scheme.adopt(bad, ((c1, c2), pars))
+    fixed, rep = scheme.scrub(corrupted)
+    # the ECC-dead block is recovered by the vote, so it must NOT surface
+    # as uncorrectable (no spurious checkpoint restore) — the 2 surviving
+    # bad words count as vote repairs instead
+    assert int(rep.uncorrectable) == 0
+    assert int(rep.corrected) >= 2
+    assert _tree_equal(fixed.payload, params)
+    assert _tree_equal(scheme.read(fixed), params)
+
+
+def test_compose_matches_manual_legacy_composition(key):
+    """Compose.scrub == (per-copy ReliableStore scrub) + vote_array."""
+    params = _params(key)
+    scheme = Compose(DiagParityEcc(), Tmr("serial"))
+    prot = scheme.protect(params)
+    (_, _), (p0, p1, p2) = prot.redundancy
+    model = TransientBitFlips(2e-4)
+    copies = [model.corrupt(params, jax.random.fold_in(key, i))
+              for i in range(3)]
+    manual = []
+    for c, par in zip(copies, (p0, p1, p2)):
+        fixed, _ = R.ReliableStore(c, par).scrub()
+        manual.append(fixed.params)
+    want = jax.tree.map(legacy_tmr.vote_array, *manual)
+    got, _ = scheme.scrub(scheme.adopt(copies[0],
+                                       ((copies[1], copies[2]),
+                                        (p0, p1, p2))))
+    assert _tree_equal(got.payload, want)
+
+
+# -- Protected as a pytree ----------------------------------------------------
+
+def test_protected_through_jit(key):
+    params = _params(key)
+    scheme = DiagParityEcc()
+    prot = scheme.protect(params)
+
+    @jax.jit
+    def roundtrip(p):
+        return p
+
+    out = roundtrip(prot)
+    assert isinstance(out, Protected)
+    assert out.scheme == scheme
+    assert _tree_equal(out.payload, params)
+    np.testing.assert_array_equal(np.asarray(out.redundancy),
+                                  np.asarray(prot.redundancy))
+
+    @jax.jit
+    def scrub_in_jit(p):
+        return scheme.scrub(p)
+
+    fixed, rep = scrub_in_jit(scheme.adopt(
+        _flip_word_bits(params, [(7, 11)]), prot.redundancy))
+    assert isinstance(fixed, Protected)
+    assert int(rep.corrected) == 1
+    assert _tree_equal(fixed.payload, params)
+
+
+def test_protected_through_vmap(key):
+    x = jax.random.normal(key, (4, 64), jnp.float32)
+    bad = inject_bit_flips(x, jax.random.fold_in(key, 1), 0.02)
+    scheme = Tmr("parallel", impl="jnp")
+    batched = Protected(bad, (x, x), scheme)   # leading batch axis on leaves
+    out = jax.vmap(scheme.read)(batched)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+    # ECC scrub vmapped over per-example stores (jnp impl: pure lax ops)
+    ecc = DiagParityEcc(impl="jnp")
+    w = jax.random.bits(key, (3, 64), jnp.uint32)
+
+    def protect_scrub(row):
+        prot = ecc.protect({"w": row})
+        fixed, rep = ecc.scrub(prot)
+        return fixed.payload["w"], rep.corrected
+
+    rows, corrected = jax.vmap(protect_scrub)(w)
+    np.testing.assert_array_equal(np.asarray(rows), np.asarray(w))
+    assert int(np.asarray(corrected).sum()) == 0
+
+
+def test_protected_checkpoint_roundtrip(tmp_path, key):
+    params = _params(key)
+    for scheme in (DiagParityEcc(), Tmr("serial"),
+                   Compose(DiagParityEcc(), Tmr("parallel"))):
+        prot = scheme.protect(params)
+        ck = Checkpointer(str(tmp_path / scheme.name), async_save=False)
+        ck.save(0, {"prot": prot}, block=True)
+        snap = ck.restore()
+        restored = snap["prot"]
+        assert isinstance(restored, Protected)
+        assert restored.scheme == scheme
+        assert _tree_equal(restored.payload, params)
+        fixed, rep = scheme.scrub(jax.tree.map(jnp.asarray, restored))
+        assert int(rep.corrected) == 0 and int(rep.uncorrectable) == 0
+        assert _tree_equal(fixed.payload, params)
+
+
+# -- parse_scheme / grid ------------------------------------------------------
+
+def test_parse_scheme_grammar():
+    assert isinstance(parse_scheme("off"), Unprotected)
+    assert isinstance(parse_scheme("ecc"), DiagParityEcc)
+    assert parse_scheme("tmr-semi").discipline == "semi_parallel"
+    assert parse_scheme("tmr-semi-parallel").discipline == "semi_parallel"
+    assert parse_scheme("tmr").discipline == "serial"
+    comp = parse_scheme("ecc+tmr-parallel")
+    assert isinstance(comp, Compose)
+    assert comp.tmr.discipline == "parallel"
+    comp2 = parse_scheme("tmr-serial+ecc")        # order-insensitive
+    assert isinstance(comp2, Compose)
+    assert parse_scheme("ecc", impl="jnp").impl == "jnp"
+    for bad in ("nope", "ecc+ecc", "tmr-bogus"):
+        with pytest.raises(ValueError):
+            parse_scheme(bad)
+
+
+def test_standard_grid_names_and_costs():
+    names = [s.name for s in standard_grid()]
+    assert names == ["unprotected", "ecc", "tmr-serial", "tmr-parallel",
+                     "tmr-semi-parallel", "ecc+tmr-serial"]
+    for s in standard_grid():
+        c = s.overhead()
+        assert c.storage_x >= 1.0 and c.throughput_x <= 1.0
+
+
+# -- train-loop integration ---------------------------------------------------
+
+def _toy_loop(tmp_path, scheme, total=12, **kw):
+    def train_step(state, batch):
+        p = state["params"]["w"] - 0.1 * batch.mean()
+        return {"params": {"w": p}}, {"loss": jnp.abs(p).sum()}
+
+    state = {"params": {"w": jnp.ones(64)}}
+    ck = Checkpointer(str(tmp_path), keep=3, async_save=False)
+    cfg = LoopConfig(total_steps=total, checkpoint_every=5, log_every=0,
+                     scrub_every=4, scheme=scheme, **kw)
+    return TrainLoop(train_step, state,
+                     lambda s: jnp.full((4,), float(s % 3)),
+                     cfg, ckpt=ck, log=lambda *_: None)
+
+
+@pytest.mark.parametrize("spec", ["ecc", "tmr-serial", "ecc+tmr"])
+def test_train_loop_scrubs_any_scheme(tmp_path, spec):
+    """Every scheme family is reachable from the train loop through
+    LoopConfig.scheme and corrects a deterministic single-bit flip."""
+    def inject(params, step):
+        u = jax.lax.bitcast_convert_type(params["w"], jnp.uint32)
+        u = u.at[7].set(u[7] ^ jnp.uint32(1 << 11))
+        return dict(params, w=jax.lax.bitcast_convert_type(u, jnp.float32))
+
+    clean = _toy_loop(tmp_path / "clean", parse_scheme("off"))
+    # clean reference run without any scheme attached
+    clean.run()
+
+    loop = _toy_loop(tmp_path / spec, parse_scheme(spec))
+    loop.inject_fn = inject
+    loop.attach_scheme()
+    out = loop.run()
+    assert out["final_step"] == 12
+    assert len(loop.scrub_reports) == 3
+    assert sum(int(r.corrected) for _, r in loop.scrub_reports) >= 3
+    assert sum(int(r.uncorrectable) for _, r in loop.scrub_reports) == 0
+    np.testing.assert_array_equal(np.asarray(loop.state["params"]["w"]),
+                                  np.asarray(clean.state["params"]["w"]))
+
+
+def test_train_loop_tmr_heavy_corruption_reaches_restart_path(tmp_path):
+    """Built-in injection must corrupt ALL held copies (independent keys),
+    so TMR double-faults and the RESTART path are reachable — a payload-only
+    injector would report uncorrectable == 0 at any rate."""
+    loop = _toy_loop(tmp_path, parse_scheme("tmr-serial"), total=12,
+                     inject_p_bit=0.2)
+    loop.attach_scheme()
+    out = loop.run()                 # must terminate despite restores
+    assert out["final_step"] == 12
+    assert sum(int(r.uncorrectable) for _, r in loop.scrub_reports) > 0
+
+
+def test_train_loop_fresh_process_rearms_copy_scheme(tmp_path):
+    """A fresh process restoring a TMR-protected run must re-arm the scheme
+    from the snapshot marker (there is no parity table to detect it by)."""
+    loop = _toy_loop(tmp_path, parse_scheme("tmr-serial"), total=20)
+    loop.attach_scheme()
+    try:
+        loop.run(fail_at=13)
+    except RuntimeError:
+        pass
+    loop2 = _toy_loop(tmp_path, None, total=20)   # cfg carries no scheme
+    assert loop2.restore()
+    assert loop2.scheme is not None and loop2.scheme.name == "tmr-serial"
+    assert loop2.protected is not None
+    loop2.run()
+    assert len(loop2.scrub_reports) > 0           # scrubbing continued
+
+
+def test_train_loop_legacy_ecc_backend_field(tmp_path):
+    loop = _toy_loop(tmp_path, None, ecc_backend="jnp")
+    loop.attach_ecc()
+    assert isinstance(loop.scheme, DiagParityEcc)
+    assert loop.store is not None and loop.store.backend == "jnp"
+    loop.run()
+    assert len(loop.scrub_reports) == 3

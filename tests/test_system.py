@@ -7,7 +7,8 @@ import pytest
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config
-from repro.core.reliability import ReliableStore, inject_bit_flips
+from repro.core.reliability import ReliableStore
+from repro.faults import inject_bit_flips
 from repro.core.tmr import vote_array
 from repro.data.synthetic import SyntheticLM
 from repro.models import params as P

@@ -6,7 +6,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import tmr
-from repro.core.reliability import inject_bit_flips
+from repro.faults import inject_bit_flips
 
 
 def test_vote_identity(key):
