@@ -1,18 +1,19 @@
 """CI bench regression guard: compare a fresh smoke `bench.json` against
 the committed `benchmarks/baseline.json`.
 
-Rows from the guarded modules (netlist_bench, campaign_mc) are compared by
-name on their throughput signals:
+Rows from the guarded modules (netlist_bench, campaign_mc, serve_bench)
+are compared by name on their throughput signals:
 
-* ``speedup_vs_scan=`` ratios from `derived` are machine-INDEPENDENT and
-  compared directly — they catch engine-relative regressions regardless
-  of how fast the CI runner is;
-* absolute signals (``gate_evals_per_s=`` rates, ``us_per_call`` timings
-  >= 10µs, ``*.total_wall_s``) are first normalized by the *median*
-  worse-than-baseline factor across all absolute rows — the machine-speed
-  factor between the baseline box and the CI runner — so a uniformly
-  slower runner passes while a single row that regressed on top of the
-  machine factor fails.
+* ratio signals from `derived` (``speedup_vs_scan=`` for the netlist
+  engines, ``speedup_vs_loop=`` / ``tmr_amortization=`` for the serving
+  engine) are machine-INDEPENDENT and compared directly — they catch
+  engine-relative regressions regardless of how fast the CI runner is;
+* absolute signals (``gate_evals_per_s=`` / ``tok_s=`` rates,
+  ``us_per_call`` timings >= 10µs, ``*.total_wall_s`` seconds) are first
+  normalized by the *median* worse-than-baseline factor across all
+  absolute rows — the machine-speed factor between the baseline box and
+  the CI runner — so a uniformly slower runner passes while a single row
+  that regressed on top of the machine factor fails.
 
 A row regresses when it is worse than (normalized) baseline by more than
 ``--tolerance`` (default 2.0 — the guard fails on >2x throughput
@@ -33,30 +34,33 @@ import re
 import sys
 from typing import Dict, Tuple
 
-GUARDED_MODULES = ("netlist_bench", "campaign_mc")
+GUARDED_MODULES = ("netlist_bench", "campaign_mc", "serve_bench")
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
-_RATE_RE = re.compile(r"gate_evals_per_s=([0-9.eE+-]+)")
-_RATIO_RE = re.compile(r"speedup_vs_scan=([0-9.eE+-]+)x")
+_RATE_RE = re.compile(r"(gate_evals_per_s|tok_s)=([0-9.eE+-]+)")
+_RATIO_RE = re.compile(
+    r"(speedup_vs_scan|speedup_vs_loop|tmr_amortization)=([0-9.eE+-]+)x")
 MIN_US = 10.0   # ignore sub-10µs timings: pure dispatch noise
 
 
 def extract_metrics(rows) -> Dict[str, Tuple[str, float]]:
     """row list -> {metric key: (kind, value)}; kind is 'ratio' (machine-
     independent, higher better), 'rate' (higher better) or 'time' (lower
-    better)."""
+    better).  Wall-clock totals arrive as ``{"kind": "time", "seconds"}``
+    rows (benchmarks.run) and are kept in seconds."""
     out: Dict[str, Tuple[str, float]] = {}
     for r in rows:
         if r.get("module") not in GUARDED_MODULES:
             continue
         name, us = r["name"], float(r.get("us_per_call", 0.0))
         derived = r.get("derived", "")
-        ratio = _RATIO_RE.search(derived)
-        if ratio:
-            out[f"{name}:speedup_vs_scan"] = ("ratio", float(ratio.group(1)))
+        for label, val in _RATIO_RE.findall(derived):
+            out[f"{name}:{label}"] = ("ratio", float(val))
         rate = _RATE_RE.search(derived)
         if rate:
-            out[f"{name}:gate_evals_per_s"] = ("rate", float(rate.group(1)))
-        elif name.endswith(".total_wall_s") or us >= MIN_US:
+            out[f"{name}:{rate.group(1)}"] = ("rate", float(rate.group(2)))
+        elif "seconds" in r:
+            out[f"{name}:seconds"] = ("time", float(r["seconds"]))
+        elif us >= MIN_US:
             out[f"{name}:us_per_call"] = ("time", us)
     return out
 

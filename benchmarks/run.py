@@ -1,8 +1,11 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` additionally
+Prints ``name,value,derived`` CSV rows (per-call rows carry microseconds,
+``*.total_wall_s`` rows carry seconds); ``--json PATH`` additionally
 writes the same rows machine-readably (the ``BENCH_*.json`` trajectory
-artifact CI uploads).  Run with:
+artifact CI uploads) — per-call rows as ``us_per_call``, wall-clock
+totals as ``{"kind": "time", "seconds": ...}`` so check_regression.py
+compares like units.  Run with:
     PYTHONPATH=src python -m benchmarks.run [--only fig4_mult,...] \
         [--json bench.json] [--smoke]
 """
@@ -21,7 +24,8 @@ except ImportError:       # direct script execution
     import _path          # noqa: F401
 
 MODULES = ["fig4_mult", "fig4_nn", "fig5_weights", "ecc_overhead",
-           "tmr_tradeoff", "kernels_bench", "campaign_mc", "netlist_bench"]
+           "tmr_tradeoff", "kernels_bench", "campaign_mc", "netlist_bench",
+           "serve_bench"]
 
 
 def main() -> None:
@@ -38,7 +42,7 @@ def main() -> None:
     if args.smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
-    print("name,us_per_call,derived")
+    print("name,value,derived")
     rows = []
     failures = 0
     for name in mods:
@@ -56,10 +60,14 @@ def main() -> None:
             print(f"{name}.ERROR,0,{err!r}", flush=True)
             rows.append({"module": name, "name": f"{name}.ERROR",
                          "us_per_call": 0.0, "derived": err})
-        wall_us = (time.time() - t0) * 1e6
-        print(f"{name}.total_wall_s,{wall_us:.0f},-", flush=True)
+        # wall-clock totals are a different unit from the per-call rows:
+        # record them as kind=time seconds, never as a microsecond
+        # us_per_call (the old mislabeling check_regression had to absorb)
+        wall_s = time.time() - t0
+        print(f"{name}.total_wall_s,{wall_s:.3f},unit=s", flush=True)
         rows.append({"module": name, "name": f"{name}.total_wall_s",
-                     "us_per_call": round(wall_us, 0), "derived": "-"})
+                     "kind": "time", "seconds": round(wall_s, 3),
+                     "derived": "unit=s"})
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"modules": mods, "smoke": bool(args.smoke),

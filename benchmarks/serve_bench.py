@@ -1,0 +1,143 @@
+"""Serving-engine benchmark: tok/s and time-to-first-token per scheme x
+execution strategy x batch (DESIGN.md §13).
+
+Two regimes, both exercised through `launch.engine.GenerationEngine`:
+
+* ``launch_*`` rows — a launch-bound configuration (1-layer micro-model,
+  long generation) where per-token Python dispatch dominates: the regime
+  the scan engine exists for.  Two machine-independent ratios are guarded
+  by check_regression here: ``speedup_vs_loop`` on the scan row, and
+  ``tmr_amortization`` = 3 x single-copy scan time / vmapped 3-copy time
+  on the TMR row — when launches are the cost, the stacked copy axis
+  amortizes them (>= 1 means vmapped TMR beats even three sequential
+  single-copy runs; 0.33 would be pay-full-3x).
+* ``smoke_*`` / ``full_*`` rows — the standard smoke-scale serving config
+  across the scheme grid (off / ecc / tmr-serial / tmr-parallel /
+  ecc+tmr): absolute tok/s, TTFT, and the informational ``copy3_cost_x``
+  diagnostic (vmapped 3-copy time / single-copy scan time; ~4.5-6x on
+  XLA:CPU where per-step compute dominates and batched ops run slower
+  than sequential ones — on a real accelerator the copy axis shards).
+  ``copy3_cost_x`` is deliberately NOT matched by the guard's regexes:
+  it divides two exec-bound measurements and is too contention-noisy.
+
+TTFT rows time the prefill launch alone (the token a user waits for).
+Run: PYTHONPATH=src python -m benchmarks.run --only serve_bench --smoke
+"""
+from __future__ import annotations
+
+import os
+import time
+
+try:
+    from . import _path  # noqa: F401
+except ImportError:
+    import _path  # noqa: F401
+
+import jax
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def _bench(fn, repeats: int) -> float:
+    """Seconds per call: compile/warmup once, then min over `repeats`."""
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _engines(cfg, spec, gen, execution="scan"):
+    from repro.launch.engine import GenerationEngine
+    from repro.reliability import parse_scheme
+    return GenerationEngine(cfg, parse_scheme(spec), gen=gen,
+                            execution=execution)
+
+
+def _batch(cfg, key, B, prompt):
+    return {"tokens": jax.random.randint(key, (B, prompt), 0, cfg.vocab)}
+
+
+def run():
+    from repro.configs import get_config
+    from repro.models import params as P
+    from repro.models import transformer as T
+
+    key = jax.random.PRNGKey(0)
+    # min-of-N per row: the guarded ratios divide two independent
+    # measurements, so their noise doubles — N is sized for the min to
+    # converge on a contended CPU (each repeat is only ~10-100 ms)
+    repeats = 9 if SMOKE else 11
+    rows = []
+
+    # -- launch-bound regime: dispatch overhead >> per-step compute --------
+    lb_cfg = get_config("phi3-mini-3.8b").smoke().replace(
+        n_layers=1, d_model=16, n_heads=1, n_kv=1, d_ff=32, vocab=512)
+    lb_params = P.materialize(key, T.model_specs(lb_cfg))
+    LB_GEN, LB_B = 256, 1
+    lb_batch = _batch(lb_cfg, key, LB_B, 2)
+
+    e_loop = _engines(lb_cfg, "off", LB_GEN, "loop")
+    e_scan = _engines(lb_cfg, "off", LB_GEN, "scan")
+    t_loop = _bench(lambda: e_loop.generate(lb_params, lb_batch)[0], repeats)
+    t_scan = _bench(lambda: e_scan.generate(lb_params, lb_batch)[0], repeats)
+    n_tok = LB_B * LB_GEN
+    rows.append((f"serve.launch_off_loop_g{LB_GEN}", t_loop / n_tok * 1e6,
+                 f"tok_s={n_tok / t_loop:.5g}"))
+    rows.append((f"serve.launch_off_scan_g{LB_GEN}", t_scan / n_tok * 1e6,
+                 f"tok_s={n_tok / t_scan:.5g} "
+                 f"speedup_vs_loop={t_loop / t_scan:.2f}x"))
+    e_tmr = _engines(lb_cfg, "tmr-parallel", LB_GEN)
+    lb_store, _ = e_tmr.prepare(lb_params)
+    t_tmr = _bench(lambda: e_tmr.generate(lb_store, lb_batch)[0], repeats)
+    rows.append((f"serve.launch_tmr_parallel_scan_g{LB_GEN}",
+                 t_tmr / n_tok * 1e6,
+                 f"tok_s={n_tok / t_tmr:.5g} "
+                 f"tmr_amortization={3 * t_scan / t_tmr:.2f}x"))
+
+    # -- model-scale regime: the scheme grid at serving smoke scale --------
+    tag = "smoke" if SMOKE else "full"
+    cfg = get_config("phi3-mini-3.8b").smoke()
+    params = P.materialize(key, T.model_specs(cfg))
+    B, PROMPT, GEN = (2, 16, 16) if SMOKE else (4, 32, 48)
+    batch = _batch(cfg, key, B, PROMPT)
+    n_tok = B * GEN
+
+    t_by_spec = {}
+    for spec, execution in (("off", "loop"), ("off", "scan"),
+                            ("ecc", "scan"), ("tmr-serial", "scan"),
+                            ("tmr-parallel", "scan"),
+                            ("ecc+tmr-parallel", "scan")):
+        eng = _engines(cfg, spec, GEN, execution)
+        store, _ = eng.prepare(params, key=key)
+        t = _bench(lambda: eng.generate(store, batch)[0], repeats)
+        t_by_spec[(spec, execution)] = t
+        name = spec.replace("ecc+tmr-parallel", "compose").replace("-", "_")
+        extra = ""
+        if (spec, execution) == ("off", "scan"):
+            extra = (f" speedup_vs_loop="
+                     f"{t_by_spec[('off', 'loop')] / t:.2f}x")
+        elif spec == "tmr-parallel":
+            extra = (f" copy3_cost_x="
+                     f"{t / t_by_spec[('off', 'scan')]:.2f}")
+        rows.append((f"serve.{tag}_{name}_{execution}_b{B}_g{GEN}",
+                     t / n_tok * 1e6, f"tok_s={n_tok / t:.5g}{extra}"))
+
+    # -- time-to-first-token: the prefill launch ---------------------------
+    off_eng = _engines(cfg, "off", GEN)
+    rows.append((f"serve.ttft_{tag}_off_b{B}",
+                 _bench(lambda: off_eng.ttft(params, batch), repeats) * 1e6,
+                 "-"))
+    tmr_eng = _engines(cfg, "tmr-parallel", GEN)
+    store, _ = tmr_eng.prepare(params)
+    rows.append((f"serve.ttft_{tag}_tmr_parallel_b{B}",
+                 _bench(lambda: tmr_eng.ttft(store, batch), repeats) * 1e6,
+                 "-"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived}")

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config
 from repro.data.synthetic import SyntheticLM
+from repro.launch.engine import GenerationEngine, make_eval_hook
 from repro.models import params as P
 from repro.models import transformer as T
 from repro.models.steps import init_train_state, make_train_step
@@ -56,13 +57,18 @@ def main():
     step_fn = jax.jit(make_train_step(cfg, AdamWConfig(
         lr=1e-3, warmup_steps=20, total_steps=args.steps)))
     ck = Checkpointer(args.ckpt_dir, keep=2)
+    # periodic sample generation through the scan-compiled engine — one
+    # jitted launch per eval instead of an interpreted decode loop
+    eval_batch = {"tokens": jnp.asarray(data.batch_at(0))[:2, :32]}
+    eval_hook = make_eval_hook(GenerationEngine(cfg, gen=16), eval_batch)
     loop = TrainLoop(step_fn, init_train_state(params),
                      lambda s: {"tokens": jnp.asarray(data.batch_at(s))},
                      LoopConfig(total_steps=args.steps, checkpoint_every=50,
                                 scrub_every=25, log_every=25,
+                                eval_every=max(args.steps // 3, 1),
                                 inject_p_bit=1e-8),
-                     ckpt=ck)
-    loop.attach_ecc()
+                     ckpt=ck, eval_fn=eval_hook)
+    loop.attach_scheme()
 
     # simulated preemption mid-run; the loop restores and replays
     fail_at = args.steps // 2
@@ -82,6 +88,10 @@ def main():
     print(f"reliability: {len(loop.scrub_reports)} scrubs, "
           f"{scrubbed} bit flips corrected, "
           f"{sum(int(r.uncorrectable) for _, r in loop.scrub_reports)} uncorrectable")
+    if loop.eval_history:
+        ev = loop.eval_history[-1]
+        print(f"eval @ step {ev['step']}: sample "
+              f"{jax.device_get(ev['tokens'])[0, :8].tolist()}")
 
 
 if __name__ == "__main__":

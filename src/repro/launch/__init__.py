@@ -1,3 +1,5 @@
 from . import mesh, specs
+from .engine import GenerationEngine, fetch_telemetry, make_eval_hook
 
-__all__ = ["mesh", "specs"]
+__all__ = ["mesh", "specs", "GenerationEngine", "fetch_telemetry",
+           "make_eval_hook"]

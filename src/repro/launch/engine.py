@@ -1,0 +1,356 @@
+"""Scan-compiled generation engine (DESIGN.md §13).
+
+Replaces the interpreted serve loop (one jitted decode launch *per token*,
+TMR as three *sequential* full generations, host syncs mid-hot-path) with
+compiled generation under any protection scheme:
+
+* **scan execution** — prefill + ``lax.scan`` over decode steps, so a whole
+  ``gen``-token generation is one jitted launch; the KV-cache/token carry
+  lives on device for the entire scan (XLA reuses the carry buffers
+  in place — the donation the Python loop had to approximate per step).
+* **copy axis** — TMR disciplines map onto real execution strategies
+  instead of cost-model labels: the three (independently corrupted,
+  per-copy ECC-scrubbed for `Compose`) stores are stacked on a leading
+  copy axis; 'parallel'/'semi_parallel' ``vmap`` the generation over it
+  (one batched launch), 'serial' re-runs the same compiled single-copy
+  scan per copy (3x latency, but never 3x in-flight activations/cache —
+  the paper's 1x-area property).
+* **in-scan voting** — with ``vote_every=k`` the scan body votes the
+  per-copy token ids (and, with ``vote_cache=True``, the KV caches) every
+  k decode steps *before* divergence compounds; ``vote_every=0`` votes
+  only the final token sequences, which is bit-exact against the legacy
+  three-sequential-generations path under identical fault keys.
+* **zero-sync telemetry** — every scrub/vote report stays on device as
+  stacked counters inside the returned telemetry dict; `fetch_telemetry`
+  performs the single host transfer after timing stops.
+
+Typical use (serve.py, serve_bench.py, examples/serve_tmr.py)::
+
+    engine = GenerationEngine(cfg, scheme, gen=64)
+    store, prep = engine.prepare(params, key=key, fault=model)
+    tokens, telem = engine.generate(store, batch)     # compiled hot path
+    stats = fetch_telemetry({**prep, **telem})        # ONE host sync
+
+The interpreted reference survives as ``execution='loop'`` /
+``generate_loop`` — the bit-exactness oracle and the benchmark baseline.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.steps import make_decode_step, make_prefill_step
+from ..reliability.scheme import (Compose, DiagParityEcc, Scheme, Tmr,
+                                  Unprotected)
+from ..core import arena
+
+__all__ = ["GenerationEngine", "fetch_telemetry", "make_eval_hook"]
+
+
+def _stack_copies(copies) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *copies)
+
+
+def _copy(stacked, i: int) -> Any:
+    return jax.tree.map(lambda x: x[i], stacked)
+
+
+def _disagreements(t3: jax.Array) -> jax.Array:
+    """Token positions where the three copies do not all agree (int32)."""
+    d = (t3[0] != t3[1]) | (t3[0] != t3[2]) | (t3[1] != t3[2])
+    return d.sum(dtype=jnp.int32)
+
+
+def fetch_telemetry(telemetry: Dict[str, jax.Array]) -> Dict[str, Any]:
+    """The single device->host transfer: fetch every on-device counter at
+    once (after timing stops) and return plain numpy values."""
+    return dict(zip(telemetry, jax.device_get(list(telemetry.values()))))
+
+
+class GenerationEngine:
+    """Compiled batched generation under a protection scheme.
+
+    Parameters
+    ----------
+    cfg         : model config (any architecture family).
+    scheme      : protection scheme; `Unprotected`, `DiagParityEcc`,
+                  `Tmr(discipline)`, or `Compose` (None -> Unprotected).
+    gen         : number of tokens to generate (prompt excluded).
+    cache_len   : decode-cache length (default prompt_len + gen).
+    vote_every  : TMR/Compose with a concurrent discipline (parallel/
+                  semi) — vote the per-copy token ids every k decode
+                  steps inside the scan (0 = vote only at the end;
+                  bit-exact vs the legacy sequential path).
+    vote_cache  : also vote the KV caches at each in-scan vote point
+                  (requires vote_every > 0).
+    execution   : 'scan' (compiled, default) or 'loop' (interpreted
+                  reference) — what `generate()` dispatches to.
+    """
+
+    def __init__(self, cfg: ModelConfig, scheme: Optional[Scheme] = None, *,
+                 gen: int, cache_len: Optional[int] = None,
+                 vote_every: int = 0, vote_cache: bool = False,
+                 execution: str = "scan"):
+        if execution not in ("scan", "loop"):
+            raise ValueError(f"execution must be 'scan' or 'loop', "
+                             f"got {execution!r}")
+        self.cfg = cfg
+        self.scheme = scheme if scheme is not None else Unprotected()
+        if vote_every or vote_cache:
+            # loud no-op guards: in-scan voting only exists on the scan
+            # engine's concurrent copy-axis path
+            if not isinstance(self.scheme, (Tmr, Compose)):
+                raise ValueError("vote_every/vote_cache require a TMR or "
+                                 "Compose scheme (no copy axis to vote over)")
+            if execution == "loop":
+                raise ValueError("in-scan voting requires execution='scan' "
+                                 "(the loop reference votes final sequences "
+                                 "only)")
+            if vote_cache and not vote_every:
+                raise ValueError("vote_cache needs vote_every > 0 (cache "
+                                 "votes happen at the in-scan vote points)")
+            if self._discipline() == "serial":
+                raise ValueError("in-scan voting needs concurrently "
+                                 "executing copies; the serial discipline "
+                                 "re-runs them sequentially (use "
+                                 "tmr-parallel/tmr-semi, or vote_every=0)")
+        self.gen = int(gen)
+        self.cache_len = cache_len
+        self.vote_every = int(vote_every)
+        self.vote_cache = bool(vote_cache)
+        self.execution = execution
+        self._built: Dict[int, Any] = {}   # prompt_len -> compiled fns
+
+    # -- scheme plumbing ----------------------------------------------------
+
+    @property
+    def copy_axis(self) -> bool:
+        """Does the store carry a leading 3-copy axis?"""
+        return isinstance(self.scheme, (Tmr, Compose))
+
+    def _tmr(self) -> Optional[Tmr]:
+        if isinstance(self.scheme, Tmr):
+            return self.scheme
+        if isinstance(self.scheme, Compose):
+            return self.scheme.tmr
+        return None
+
+    def _discipline(self) -> Optional[str]:
+        tmr = self._tmr()
+        return tmr.discipline if tmr is not None else None
+
+    def prepare(self, params: Any, key: Optional[jax.Array] = None,
+                fault=None, dt: float = 1.0) -> Tuple[Any, Dict[str, Any]]:
+        """Build the scheme's serving store from clean params.
+
+        Applies one exposure interval of `fault` to every held data copy
+        (copy i under ``fold_in(key, 100 + i)`` — the serve-driver key
+        convention, so engine stores are bit-identical to the legacy
+        driver's under the same seed), then applies the scheme's
+        *storage-side* protection: ECC schemes scrub the corrupted
+        store(s) — for `Compose` all three copies in one fused launch —
+        and TMR schemes stack the copies on the leading copy axis.
+
+        Returns (store, prep_telemetry); the telemetry values are
+        on-device scalars (fetch once via `fetch_telemetry`).
+        """
+        scheme = self.scheme
+
+        def corrupt(i: int) -> Any:
+            if fault is None:
+                return params
+            return fault.corrupt(params, jax.random.fold_in(key, 100 + i), dt)
+
+        if isinstance(scheme, Unprotected):
+            return corrupt(0), {}
+        if isinstance(scheme, DiagParityEcc):
+            prot = scheme.protect(params)
+            fixed, rep = scheme.scrub(scheme.adopt(corrupt(0),
+                                                   prot.redundancy))
+            return fixed.payload, {"ecc_corrected": rep.corrected,
+                                   "ecc_uncorrectable": rep.uncorrectable}
+        if isinstance(scheme, Tmr):
+            return _stack_copies([corrupt(i) for i in range(3)]), {}
+        if isinstance(scheme, Compose):
+            buf, spec = arena.pack(params)
+            parity = scheme.ecc._op().encode(buf, slopes=scheme.ecc.slopes)
+            packed = [arena.pack(corrupt(i))[0] for i in range(3)]
+            bufs, _, counts = scheme.ecc.scrub_copies(packed, [parity] * 3)
+            copies = [arena.unpack(b, spec) for b in bufs]
+            return _stack_copies(copies), {"ecc_corrected": counts[0],
+                                           "ecc_uncorrectable": counts[2]}
+        raise ValueError(f"unhandled scheme {scheme!r}")
+
+    # -- compiled paths -----------------------------------------------------
+
+    def _build(self, prompt_len: int):
+        if prompt_len in self._built:
+            return self._built[prompt_len]
+        cfg, gen = self.cfg, self.gen
+        cache_len = self.cache_len or (prompt_len + gen)
+        prefill = make_prefill_step(cfg, cache_len=cache_len)
+        decode = make_decode_step(cfg)
+        tmr = self._tmr()
+        vote = tmr._vote() if tmr is not None else None
+        vote_every, vote_cache = self.vote_every, self.vote_cache
+
+        def single_scan(params, batch):
+            tok0, _, cache = prefill(params, batch)
+            if gen == 1:
+                return tok0, {}
+
+            def body(carry, _):
+                tok, cache = carry
+                ntok, _, cache = decode(params, tok, cache)
+                return (ntok, cache), ntok
+
+            _, toks = jax.lax.scan(body, (tok0, cache), None, length=gen - 1)
+            # toks (gen-1, B, 1) -> (B, gen-1); tok0 (B, 1)
+            return jnp.concatenate([tok0, toks[:, :, 0].T], axis=1), {}
+
+        # concurrent copy-axis evaluator for 'parallel'/'semi_parallel':
+        # vmap prefill+scan over the stacked copies (one batched launch; on
+        # a real mesh the axis shards over replica groups / folds into row
+        # capacity).  The 'serial' discipline never enters this path — it
+        # re-runs the single-copy scan per copy (generate_scan), keeping
+        # the paper's 1x-area property: no 3x activations/cache in flight.
+        def tmr_scan(stacked, batch):
+            tok3, _, cache3 = jax.vmap(
+                lambda p: prefill(p, batch))(stacked)
+
+            def body(carry, step):
+                tok3, cache3 = carry
+                ntok3, _, cache3 = jax.vmap(decode)(stacked, tok3, cache3)
+                dis = _disagreements(ntok3)
+                if vote_every:
+                    do = (step + 1) % vote_every == 0
+                    voted = vote(ntok3[0], ntok3[1], ntok3[2])
+                    ntok3 = jnp.where(do, voted[None], ntok3)
+                    if vote_cache:
+                        cache3 = jax.lax.cond(
+                            do,
+                            lambda c: jax.tree.map(
+                                lambda x: jnp.broadcast_to(
+                                    vote(x[0], x[1], x[2])[None],
+                                    x.shape).astype(x.dtype), c),
+                            lambda c: c, cache3)
+                return (ntok3, cache3), (ntok3, dis)
+
+            telem: Dict[str, jax.Array] = {}
+            if gen == 1:
+                seq3 = tok3
+                telem["tmr_step_disagreements"] = \
+                    _disagreements(tok3)[None]
+            else:
+                _, (steps3, dis) = jax.lax.scan(
+                    body, (tok3, cache3), jnp.arange(gen - 1))
+                # (gen-1, 3, B, 1) + (3, B, 1) -> per-copy (3, B, gen)
+                seq3 = jnp.concatenate([tok3[None], steps3], axis=0)
+                seq3 = jnp.moveaxis(seq3[..., 0], 0, -1)
+                telem["tmr_step_disagreements"] = jnp.concatenate(
+                    [_disagreements(tok3)[None], dis])
+            out = vote(seq3[0], seq3[1], seq3[2])
+            telem["tmr_final_disagreements"] = _disagreements(seq3)
+            return out, telem
+
+        def tmr_prefill(stacked, batch):
+            return jax.vmap(lambda p: prefill(p, batch))(stacked)
+
+        # donation: the Python-loop path re-launches decode per token; on
+        # accelerators the cache carry is donated so each step updates the
+        # KV buffers in place (CPU has no donation — skip the warning spam)
+        donate = (2,) if jax.default_backend() != "cpu" else ()
+        concurrent = tmr is not None and tmr.discipline != "serial"
+        fns = {
+            "prefill": jax.jit(prefill),
+            "decode": jax.jit(decode, donate_argnums=donate),
+            "single_scan": jax.jit(single_scan),
+            "tmr_prefill": jax.jit(tmr_prefill) if concurrent else None,
+            "tmr_scan": jax.jit(tmr_scan) if concurrent else None,
+        }
+        self._built[prompt_len] = fns
+        return fns
+
+    # -- public entry points ------------------------------------------------
+
+    def generate(self, store: Any, batch: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Generate `gen` tokens: (tokens (B, gen) int32, telemetry).
+
+        Dispatches on the configured execution mode; telemetry values are
+        on-device counters (single fetch via `fetch_telemetry`)."""
+        if self.execution == "loop":
+            return self.generate_loop(store, batch)
+        return self.generate_scan(store, batch)
+
+    def generate_scan(self, store, batch):
+        """The compiled path: one jitted prefill+scan launch per copy —
+        one total for single stores and the vmapped parallel/semi copy
+        axis; the serial discipline re-runs the same compiled program per
+        copy (3x latency, 1x in-flight activations/cache) and votes the
+        three token sequences."""
+        fns = self._build(batch["tokens"].shape[1])
+        if not self.copy_axis:
+            return fns["single_scan"](store, batch)
+        if self._discipline() == "serial":
+            outs = [fns["single_scan"](_copy(store, i), batch)[0]
+                    for i in range(3)]
+            voted = self._tmr()._vote()(*outs)
+            return voted, {"tmr_final_disagreements":
+                           _disagreements(jnp.stack(outs))}
+        return fns["tmr_scan"](store, batch)
+
+    def generate_loop(self, store, batch):
+        """Interpreted reference: jitted prefill + per-token decode
+        launches; TMR as three sequential full generations with one final
+        vote (the legacy serving path — the bit-exactness oracle)."""
+        fns = self._build(batch["tokens"].shape[1])
+
+        def one(params):
+            tok, _, cache = fns["prefill"](params, batch)
+            toks = [tok]
+            for _ in range(self.gen - 1):
+                tok, _, cache = fns["decode"](params, tok, cache)
+                toks.append(tok)
+            return jnp.concatenate(toks, axis=1)
+
+        if not self.copy_axis:
+            return one(store), {}
+        outs = [one(_copy(store, i)) for i in range(3)]
+        seq3 = jnp.stack(outs)
+        voted = self._tmr()._vote()(*outs)
+        return voted, {"tmr_final_disagreements": _disagreements(seq3)}
+
+    def ttft(self, store, batch) -> jax.Array:
+        """First generated token(s) only — the prefill launch.  Time this
+        (after warmup) for time-to-first-token."""
+        fns = self._build(batch["tokens"].shape[1])
+        if not self.copy_axis:
+            tok, _, _ = fns["prefill"](store, batch)
+            return tok
+        if self._discipline() == "serial":
+            toks = [fns["prefill"](_copy(store, i), batch)[0]
+                    for i in range(3)]
+        else:
+            tok3, _, _ = fns["tmr_prefill"](store, batch)
+            toks = [tok3[0], tok3[1], tok3[2]]
+        return self._tmr()._vote()(*toks)
+
+
+def make_eval_hook(engine: GenerationEngine, batch: Dict[str, jax.Array]
+                   ) -> Callable[[Any, int], Dict[str, Any]]:
+    """A `TrainLoop` eval hook: compiled generation from the current params.
+
+    The loop's scheme has already scrubbed/voted the store before the hook
+    fires, so the hook runs the engine's single-copy scan path on the plain
+    params — one launch per eval, tokens left on device (the loop keeps
+    them in `eval_history`; fetch after training)."""
+    def eval_fn(params: Any, step: int) -> Dict[str, Any]:
+        fns = engine._build(batch["tokens"].shape[1])
+        tokens, _ = fns["single_scan"](params, batch)
+        return {"step": step, "tokens": tokens}
+
+    return eval_fn

@@ -1,22 +1,31 @@
-"""Serving driver: batched prefill + decode under a composable protection
-scheme (the paper's §IV/§V applied to model serving; DESIGN.md §12).
+"""Serving driver: compiled batched generation under a composable
+protection scheme (the paper's §IV/§V applied to model serving;
+DESIGN.md §12/§13).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
-      --batch 4 --prompt-len 64 --gen 32 --scheme tmr-serial --inject-p-bit 1e-4
+      --batch 4 --prompt-len 64 --gen 32 --scheme tmr-parallel \
+      --inject-p-bit 1e-4 --vote-every 8
 
-`--scheme` accepts ``off | ecc | tmr-serial | tmr-parallel | tmr-semi |
-ecc+tmr[-<discipline>]`` (repro.reliability.parse_scheme grammar):
+Generation runs through `launch.engine.GenerationEngine`: prefill +
+``lax.scan`` over decode steps, so the whole ``--gen``-token generation is
+one jitted launch (``--engine loop`` keeps the interpreted per-token
+reference path for comparison).  ``--scheme`` accepts ``off | ecc |
+tmr-serial | tmr-parallel | tmr-semi | ecc+tmr[-<discipline>]``
+(repro.reliability.parse_scheme grammar):
 
 * ``ecc``       — protect the weights with the diagonal-parity word code,
-                  corrupt, scrub once, serve the corrected store;
-* ``tmr-*``     — serve three independently corrupted copies and vote the
-                  generated token ids per-bit, under the selected paper
-                  discipline (serial / parallel / semi-parallel);
-* ``ecc+tmr-*`` — the joint long-term configuration: per-copy ECC scrub of
-                  the stores, then TMR voting over the three generations.
+                  corrupt, scrub once (fused launch), serve corrected;
+* ``tmr-*``     — three independently corrupted copies stacked on a
+                  leading copy axis; 'parallel'/'semi' vmap the generation
+                  over it, 'serial' sequences it (lax.map), with per-bit
+                  voting of the generated token ids — in-scan every
+                  ``--vote-every`` steps, and always on the final
+                  sequences;
+* ``ecc+tmr-*`` — the joint long-term configuration: one fused ECC scrub
+                  over all three copies, then TMR voting.
 
-The deprecated ``--tmr {off,serial,parallel,semi}`` flag remains as an
-alias for ``--scheme tmr-*``.
+All scrub/vote counters stay on device during the timed region and are
+fetched once after timing stops (no host syncs in the hot path).
 """
 from __future__ import annotations
 
@@ -24,7 +33,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config, list_archs
@@ -32,9 +40,9 @@ from ..faults import (FaultModel, RetentionDrift, StuckAtFaults,
                       TransientBitFlips)
 from ..models import params as P
 from ..models import transformer as T
-from ..models.steps import make_decode_step, make_prefill_step
-from ..reliability import (Compose, DiagParityEcc, Tmr, Unprotected,
-                           parse_scheme)
+from ..reliability import Compose, DiagParityEcc, Tmr, Unprotected, \
+    parse_scheme
+from .engine import GenerationEngine, fetch_telemetry
 
 
 def main() -> None:
@@ -44,13 +52,18 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--scheme", default=None,
+    ap.add_argument("--scheme", default="off",
                     help="protection scheme spec: off | ecc | tmr-serial | "
                          "tmr-parallel | tmr-semi | ecc+tmr[-<discipline>]")
-    ap.add_argument("--tmr", default=None,
-                    choices=["off", "serial", "parallel", "semi",
-                             "semi_parallel"],
-                    help="DEPRECATED alias for --scheme tmr-<discipline>")
+    ap.add_argument("--engine", default="scan", choices=["scan", "loop"],
+                    help="scan: one compiled prefill+scan launch (default);"
+                         " loop: interpreted per-token reference path")
+    ap.add_argument("--vote-every", type=int, default=0,
+                    help="TMR/Compose: vote token ids across copies every k "
+                         "decode steps inside the scan (0 = only at the end)")
+    ap.add_argument("--vote-cache", action="store_true",
+                    help="also vote the KV caches at in-scan vote points")
+    ap.add_argument("--tmr", default=None, help=argparse.SUPPRESS)
     ap.add_argument("--inject-p-bit", type=float, default=0.0,
                     help="corrupt each weight bit of each copy w.p. p")
     ap.add_argument("--fault", default="bitflip",
@@ -60,45 +73,43 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    if args.scheme is not None and args.tmr is not None:
-        ap.error("--tmr is a deprecated alias for --scheme tmr-<discipline>;"
-                 " pass only one of them")
-    spec = args.scheme
-    if spec is None:
-        if args.tmr not in (None, "off"):
-            print(f"[serve] NOTE: --tmr {args.tmr} is deprecated; use "
-                  f"--scheme tmr-{args.tmr.replace('_', '-')}")
-            spec = f"tmr-{args.tmr.replace('_', '-')}"
-        else:
-            spec = "off"
-    scheme = parse_scheme(spec)
+    if args.tmr is not None:
+        ap.error("--tmr was removed; use --scheme tmr-<serial|parallel|semi>"
+                 " (DESIGN.md §12)")
+    if args.engine == "loop" and (args.vote_every or args.vote_cache):
+        ap.error("--vote-every/--vote-cache only apply to the scan engine "
+                 "(the loop reference votes final sequences only); drop "
+                 "the flags or use --engine scan")
+    scheme = parse_scheme(args.scheme)
+    if args.vote_every or args.vote_cache:
+        tmr = scheme if isinstance(scheme, Tmr) \
+            else scheme.tmr if isinstance(scheme, Compose) else None
+        if tmr is None:
+            ap.error(f"--vote-every/--vote-cache need a copy axis to vote "
+                     f"over; scheme {scheme.name!r} has none (use --scheme "
+                     f"tmr-* or ecc+tmr[-*])")
+        if tmr.discipline == "serial":
+            ap.error("in-scan voting needs concurrently executing copies; "
+                     "the serial discipline re-runs them sequentially (use "
+                     "tmr-parallel/tmr-semi, or drop the vote flags)")
+    if args.vote_cache and not args.vote_every:
+        ap.error("--vote-cache needs --vote-every K (cache votes happen at "
+                 "the in-scan vote points)")
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
     key = jax.random.PRNGKey(args.seed)
     params = P.materialize(key, T.model_specs(cfg))
-    cache_len = args.prompt_len + args.gen
 
     batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len),
                                           0, cfg.vocab)}
     if cfg.family == "vlm":
-        batch["vis_emb"] = jax.random.normal(key, (args.batch, cfg.vis_tokens,
-                                                   cfg.vis_dim), jnp.float32)
+        batch["vis_emb"] = jax.random.normal(
+            key, (args.batch, cfg.vis_tokens, cfg.vis_dim), np.float32)
     if cfg.family == "encdec":
-        batch["enc_emb"] = jax.random.normal(key, (args.batch, args.prompt_len,
-                                                   cfg.d_model), jnp.float32)
-
-    prefill = jax.jit(make_prefill_step(cfg, cache_len=cache_len))
-    decode = jax.jit(make_decode_step(cfg))
-
-    def run_copy(p):
-        tok, logits, cache = prefill(p, batch)
-        toks = [tok]
-        for _ in range(args.gen - 1):
-            tok, logits, cache = decode(p, tok, cache)
-            toks.append(tok)
-        return jnp.concatenate(toks, axis=1)
+        batch["enc_emb"] = jax.random.normal(
+            key, (args.batch, args.prompt_len, cfg.d_model), np.float32)
 
     fault: FaultModel = {
         "bitflip": TransientBitFlips(args.inject_p_bit),
@@ -107,57 +118,49 @@ def main() -> None:
         "drift": RetentionDrift(args.inject_p_bit),
     }[args.fault]
 
-    def corrupt(i: int):
-        """Copy i's stored weights after an exposure interval."""
-        if not args.inject_p_bit:
-            return params
-        return fault.corrupt(params, jax.random.fold_in(key, 100 + i))
+    engine = GenerationEngine(cfg, scheme, gen=args.gen,
+                              vote_every=args.vote_every,
+                              vote_cache=args.vote_cache,
+                              execution=args.engine)
+    store, prep = engine.prepare(
+        params, key=key, fault=fault if args.inject_p_bit else None)
+    # keep compile and prepare's async corrupt/scrub launches out of the
+    # timed region: one untimed warmup generation, then drain the store
+    jax.block_until_ready(engine.generate(store, batch)[0])
+    store = jax.block_until_ready(store)
 
+    # timed region: no host syncs — telemetry stays on device until after
     t0 = time.time()
-    if isinstance(scheme, Unprotected):
-        # honest baseline for scheme sweeps: the unprotected store takes
-        # the same exposure as every protected scheme's copy 0
-        out = run_copy(corrupt(0))
-    elif isinstance(scheme, DiagParityEcc):
-        # short-term discipline: scrub the corrupted store, serve corrected
-        prot = scheme.protect(params)
-        prot, report = scheme.scrub(scheme.adopt(corrupt(0), prot.redundancy))
-        print(f"[serve] ecc scrub: corrected={int(report.corrected)} "
-              f"uncorrectable={int(report.uncorrectable)}")
-        out = run_copy(prot.payload)
-    elif isinstance(scheme, Tmr):
-        # three copies with independently injected storage corruption;
-        # per-bit majority voting on the generated token ids.  On this
-        # single-host driver all disciplines execute sequentially (same
-        # voted bits, no 3x peak memory from stacking full copies); on a
-        # real mesh parallel/semi-parallel shard the replica axis
-        out = scheme.wrap(run_copy, sequential=True)(
-            corrupt(0), corrupt(1), corrupt(2))
-    elif isinstance(scheme, Compose):
-        # the joint long-term configuration: per-copy ECC scrub, then TMR
-        # voting over the three generations
-        prot = scheme.ecc.protect(params)
-        copies, counts = [], [0, 0]
-        for i in range(3):
-            fixed, rep = scheme.ecc.scrub(
-                scheme.ecc.adopt(corrupt(i), prot.redundancy))
-            counts[0] += int(rep.corrected)
-            counts[1] += int(rep.uncorrectable)
-            copies.append(fixed.payload)
-        print(f"[serve] ecc scrub (3 copies): corrected={counts[0]} "
-              f"uncorrectable={counts[1]}")
-        out = scheme.tmr.wrap(run_copy, sequential=True)(*copies)
-    else:
-        raise ValueError(f"unhandled scheme {scheme!r}")
+    out, telem = engine.generate(store, batch)
+    out = jax.block_until_ready(out)
     dt = time.time() - t0
 
-    ref = run_copy(params) if args.inject_p_bit else out
-    agree = float((out == ref).mean())
+    stats = fetch_telemetry({**prep, **telem})   # the single fetch
+    # off/ecc stores are plain params pytrees, so the timed engine's
+    # compiled single-copy program serves the clean reference without a
+    # recompile; copy-axis schemes need a fresh single-copy engine
+    clean = engine if isinstance(scheme, (Unprotected, DiagParityEcc)) \
+        else GenerationEngine(cfg, gen=args.gen, execution=args.engine)
+    ref = clean.generate(params, batch)[0] if args.inject_p_bit else out
+    agree = float(np.asarray(out == ref).mean())
     tok_s = args.batch * args.gen / dt
-    print(f"[serve] {cfg.name} scheme={scheme.name} "
+    print(f"[serve] {cfg.name} scheme={scheme.name} engine={args.engine} "
           f"p_bit={args.inject_p_bit:g}: {args.batch}x{args.gen} tokens "
           f"in {dt:.1f}s ({tok_s:.1f} tok/s), "
           f"agreement with clean run: {agree:.3f}")
+    if stats:
+        parts = []
+        if "ecc_corrected" in stats:
+            parts.append(f"ecc corrected={int(stats['ecc_corrected'])} "
+                         f"uncorrectable={int(stats['ecc_uncorrectable'])}")
+        if "tmr_final_disagreements" in stats:
+            parts.append("vote disagreements: final="
+                         f"{int(stats['tmr_final_disagreements'])}")
+        if "tmr_step_disagreements" in stats:
+            steps = np.asarray(stats["tmr_step_disagreements"])
+            parts.append(f"per-step={steps.sum()} over {steps.size} steps")
+        print(f"[serve] reliability (fetched after timing): "
+              f"{'; '.join(parts)}")
     print(f"[serve] cost model ({scheme.name}): {scheme.overhead().describe()}")
     print("[serve] sample:", np.asarray(out[0, :16]).tolist())
 

@@ -22,9 +22,10 @@ Resolution order for `resolve(op, impl)`:
    name applied to every op that has it (``REPRO_IMPL=jnp``) or a
    comma-separated list of ``op=impl`` pairs
    (``REPRO_IMPL=netlist_exec=kernel,diag_parity=jnp``);
-3. the deprecated ``REPRO_NETLIST_IMPL`` env var, honored as an alias for
-   ``netlist_exec=...`` — THIS module is its only reader (the shim);
-4. the registered default.
+3. the registered default.
+
+The one-release ``REPRO_NETLIST_IMPL`` alias has been removed: a set
+variable now raises with the ``REPRO_IMPL=netlist_exec=...`` migration.
 
 Every implementation is registered as a lazy loader so importing this
 module never drags in the Pallas kernel packages; `dispatch(op, impl)`
@@ -44,8 +45,9 @@ __all__ = ["register", "ops", "implementations", "default_impl", "resolve",
            "dispatch", "use_interpret", "ENV_VAR"]
 
 ENV_VAR = "REPRO_IMPL"
-#: deprecated alias for ``REPRO_IMPL=netlist_exec=...`` — kept one release;
-#: no other module under src/ or benchmarks/ may read REPRO_NETLIST_IMPL.
+#: removed alias for ``REPRO_IMPL=netlist_exec=...`` (deprecated for one
+#: release): setting it now raises with a migration hint instead of being
+#: silently honored or silently ignored.
 _LEGACY_NETLIST_ENV = "REPRO_NETLIST_IMPL"
 _INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 
@@ -83,10 +85,15 @@ def default_impl(op: str) -> str:
     return _DEFAULTS[op]
 
 
-def _env_overrides() -> Tuple[Dict[str, str], Optional[str], Optional[str]]:
-    """Parse the env into (REPRO_IMPL op=impl pairs, REPRO_IMPL bare token,
-    legacy netlist alias) — kept separate so ANY REPRO_IMPL form outranks
-    the deprecated variable."""
+def _env_overrides() -> Tuple[Dict[str, str], Optional[str]]:
+    """Parse REPRO_IMPL into (op=impl pairs, bare token).  The removed
+    ``REPRO_NETLIST_IMPL`` alias raises here so a stale environment fails
+    loudly with the migration instead of silently changing behavior."""
+    legacy = os.environ.get(_LEGACY_NETLIST_ENV)
+    if legacy:
+        raise RuntimeError(
+            f"the REPRO_NETLIST_IMPL environment variable was removed; use "
+            f"REPRO_IMPL=netlist_exec={legacy} (DESIGN.md §12)")
     pairs: Dict[str, str] = {}
     bare: Optional[str] = None
     for token in filter(None, (t.strip() for t in
@@ -96,20 +103,18 @@ def _env_overrides() -> Tuple[Dict[str, str], Optional[str], Optional[str]]:
             pairs[op.strip()] = impl.strip()
         else:
             bare = token
-    return pairs, bare, os.environ.get(_LEGACY_NETLIST_ENV) or None
+    return pairs, bare
 
 
 def resolve(op: str, impl: Optional[str] = None) -> str:
     """Implementation name for `op`: per-call > REPRO_IMPL (pair, then bare
-    token) > deprecated netlist alias > registered default."""
+    token) > registered default."""
     avail = implementations(op)
     if impl is None:
-        pairs, bare, legacy = _env_overrides()
+        pairs, bare = _env_overrides()
         impl = pairs.get(op)
         if impl is None and bare in avail:
             impl = bare
-        if impl is None and op == "netlist_exec":
-            impl = legacy
     if impl is None:
         impl = _DEFAULTS[op]
     if impl not in avail:

@@ -103,12 +103,6 @@ def _zero_report() -> ScrubReport:
     return ScrubReport(corrected=z, parity_fixed=z, uncorrectable=z)
 
 
-def _sum_reports(reports) -> ScrubReport:
-    return ScrubReport(corrected=sum(r.corrected for r in reports),
-                       parity_fixed=sum(r.parity_fixed for r in reports),
-                       uncorrectable=sum(r.uncorrectable for r in reports))
-
-
 def _vote_counts(a: Any, b: Any, c: Any) -> Tuple[jax.Array, jax.Array]:
     """(corrected, uncorrectable) word counts for a 3-copy vote, disjoint
     like the ECC convention: `corrected` counts words where a majority
@@ -230,6 +224,29 @@ class DiagParityEcc(Scheme):
         report = ScrubReport(corrected=counts[0], parity_fixed=counts[1],
                              uncorrectable=counts[2])
         return out, report
+
+    def scrub_copies(self, bufs, parities) -> Tuple[list, list, jax.Array]:
+        """Scrub N same-layout packed copies in ONE fused launch.
+
+        The word code is block-local (every 32-word block carries its own
+        parity row), so N copies of one arena concatenate along the block
+        axis into a single buffer and the fused encode->syndrome->correct
+        pass covers all of them in one kernel launch — replacing the
+        Python loop of per-copy scrubs that serialized the TMR copy axis.
+
+        bufs: list of (n_words,) uint32 arenas sharing one ArenaSpec;
+        parities: matching list of (n_blocks, F) tables.  Returns
+        (fixed bufs, fixed parities, counts) with counts the (3,) int32
+        vector summed across copies — all on device, nothing fetched.
+        """
+        n = bufs[0].shape[0]
+        nb = parities[0].shape[0]
+        fixed, par2, counts = self._op().scrub(
+            jnp.concatenate(list(bufs)), jnp.concatenate(list(parities)),
+            slopes=self.slopes)
+        return ([fixed[i * n:(i + 1) * n] for i in range(len(bufs))],
+                [par2[i * nb:(i + 1) * nb] for i in range(len(parities))],
+                counts)
 
     def overhead(self) -> CostReport:
         # storage: len(slopes) parity words per 32-word block; latency: the
@@ -370,21 +387,19 @@ class Compose(Scheme):
 
     def scrub(self, prot: Protected) -> Tuple[Protected, ScrubReport]:
         # scrub and vote directly on the packed arenas: all three copies
-        # share one layout, so the vote is three uint32 buffers through the
-        # tmr_vote backend and only the voted result is unpacked once
+        # share one layout, so the per-copy ECC pass is ONE fused launch
+        # over the concatenated copies (scrub_copies) and the vote is three
+        # uint32 buffers through the tmr_vote backend; only the voted
+        # result is unpacked once.  Counts stay on device (no per-copy
+        # Python accumulation).
         (c1, c2), (p0, p1, p2) = prot.redundancy
         op = self.ecc._op()
-        bufs, reports = [], []
-        spec = None
-        for i, (copy, par) in enumerate(((prot.payload, p0), (c1, p1),
-                                         (c2, p2))):
+        packed, spec = [], None
+        for i, copy in enumerate((prot.payload, c1, c2)):
             buf, spec = prot._packed if i == 0 and prot._packed is not None \
                 else arena.pack(copy)
-            buf2, par2, counts = op.scrub(buf, par, slopes=self.ecc.slopes)
-            bufs.append(buf2)
-            reports.append(ScrubReport(corrected=counts[0],
-                                       parity_fixed=counts[1],
-                                       uncorrectable=counts[2]))
+            packed.append(buf)
+        bufs, _, counts = self.ecc.scrub_copies(packed, (p0, p1, p2))
         vbuf = self.tmr._vote()(*bufs)
         voted = arena.unpack(vbuf, spec)
         vpar = op.encode(vbuf, slopes=self.ecc.slopes)
@@ -393,11 +408,10 @@ class Compose(Scheme):
         d01, d02, d12 = (bufs[0] != bufs[1], bufs[0] != bufs[2],
                          bufs[1] != bufs[2])
         conflict = d01 & d02 & d12
-        ecc_sum = _sum_reports(reports)
         report = ScrubReport(
-            corrected=ecc_sum.corrected
+            corrected=counts[0]
             + ((d01 | d02 | d12) & ~conflict).sum(dtype=jnp.int32),
-            parity_fixed=ecc_sum.parity_fixed,
+            parity_fixed=counts[1],
             uncorrectable=conflict.sum(dtype=jnp.int32))
         return out, report
 

@@ -15,6 +15,12 @@ triggers a checkpoint restore) and a core.analytics.ScrubTrajectory
 (simulated) preemptions by restoring the latest checkpoint and replaying
 the data stream from the step counter (the synthetic pipeline is
 deterministic in step).
+
+Scrub telemetry performs ONE host fetch per scrub interval (the monitor's
+restore decision needs the counts); an optional `eval_fn` hook — e.g.
+`launch.engine.make_eval_hook`, a compiled one-launch sample generation —
+fires every `eval_every` steps on the post-scrub params, keeping its
+results on device in `eval_history`.
 """
 from __future__ import annotations
 
@@ -44,16 +50,24 @@ class LoopConfig:
     checkpoint_every: int = 50
     scrub_every: int = 0          # 0 = scheme scrubbing disabled
     log_every: int = 10
+    eval_every: int = 0           # 0 = eval hook disabled; else the loop's
+                                  # eval_fn fires every this many steps
     inject_p_bit: float = 0.0     # simulated indirect soft-error rate per scrub interval
     inject_seed: int = 0
     fault_model: Optional[FaultModel] = None  # overrides inject_p_bit: any
                                   # repro.faults model drives the injection
     scheme: Optional[Scheme] = None  # protection scheme (repro.reliability);
                                   # None -> DiagParityEcc() on attach_scheme()
-    ecc_backend: Optional[str] = None  # DEPRECATED: impl override for the
-                                  # default DiagParityEcc; use scheme= instead
     max_scrub_restores: int = 3   # consecutive scheme restores before giving up
                                   # and continuing with best-effort correction
+    #: REMOVED (was deprecated one release): use scheme=DiagParityEcc(impl=...)
+    ecc_backend: dataclasses.InitVar[Optional[str]] = None
+
+    def __post_init__(self, ecc_backend):
+        if ecc_backend is not None:
+            raise TypeError(
+                "LoopConfig.ecc_backend was removed; pass "
+                "scheme=DiagParityEcc(impl=...) instead (DESIGN.md §12)")
 
 
 class TrainLoop:
@@ -61,7 +75,8 @@ class TrainLoop:
                  cfg: LoopConfig, ckpt: Optional[Checkpointer] = None,
                  monitor: Optional[HeartbeatMonitor] = None,
                  log: Callable[[str], None] = print,
-                 inject_fn: Optional[Callable[[Any, int], Any]] = None):
+                 inject_fn: Optional[Callable[[Any, int], Any]] = None,
+                 eval_fn: Optional[Callable[[Any, int], Any]] = None):
         self.train_step = train_step
         self.state = state
         self.batch_at = batch_at
@@ -73,11 +88,23 @@ class TrainLoop:
         self.scheme: Optional[Scheme] = None         # active protection scheme
         self.protected: Optional[Protected] = None   # scheme-wrapped params
         self.inject_fn = inject_fn    # deterministic corruptor hook (tests)
+        self.eval_fn = eval_fn        # e.g. launch.engine.make_eval_hook —
+                                      # compiled sample generation every
+                                      # cfg.eval_every steps
         self.metrics_history: list = []
+        self.eval_history: list = []
         self.scrub_reports: list = []
         self.scrub_trajectory = ScrubTrajectory()
         self.total_restores = 0
         self._consecutive_scrub_restores = 0
+
+    def __getattr__(self, name):
+        if name == "attach_ecc":
+            raise AttributeError(
+                "TrainLoop.attach_ecc() was removed; use attach_scheme() "
+                "(default scheme is DiagParityEcc — DESIGN.md §12)")
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
 
     # -- reliability hooks -----------------------------------------------------
     # Protocol (paper §IV adapted): redundancy is refreshed after every
@@ -110,17 +137,13 @@ class TrainLoop:
     def _default_scheme(self) -> Scheme:
         if self.cfg.scheme is not None:
             return self.cfg.scheme
-        return DiagParityEcc(impl=self.cfg.ecc_backend)
+        return DiagParityEcc()
 
     def attach_scheme(self, scheme: Optional[Scheme] = None) -> None:
         """Arm the protection scheme over the current parameter store."""
         self.scheme = scheme or self._default_scheme()
         self.protected = self.scheme.protect(self.state["params"])
         self.scrub_trajectory.n_blocks = self._n_blocks()
-
-    def attach_ecc(self) -> None:
-        """DEPRECATED shim for attach_scheme() (historic ECC-only entry)."""
-        self.attach_scheme()
 
     def _n_blocks(self) -> int:
         return arena.arena_spec(self.state["params"]).n_blocks
@@ -183,18 +206,24 @@ class TrainLoop:
         step counter (the caller must not finish the current iteration)."""
         fixed, report = self.scheme.scrub(self._corrupted_store())
         self.scrub_reports.append((self.step, report))
-        self.scrub_trajectory.add(self.step, int(report.corrected),
-                                  int(report.parity_fixed),
-                                  int(report.uncorrectable))
-        decision = self.monitor.record_scrub(int(report.corrected),
-                                             int(report.parity_fixed),
-                                             int(report.uncorrectable))
+        # ONE host fetch per scrub interval: the monitor's restore decision
+        # genuinely needs the counter values on the host, but everything
+        # downstream (trajectory, monitor) reuses the same fetched triple —
+        # not six independent int() syncs against the device
+        corrected, parity_fixed, uncorrectable = (
+            int(v) for v in jax.device_get((report.corrected,
+                                            report.parity_fixed,
+                                            report.uncorrectable)))
+        self.scrub_trajectory.add(self.step, corrected, parity_fixed,
+                                  uncorrectable)
+        decision = self.monitor.record_scrub(corrected, parity_fixed,
+                                             uncorrectable)
         if decision == Decision.RESTART and self.ckpt is not None \
                 and self.ckpt.latest_step() is not None:
             if self._consecutive_scrub_restores < self.cfg.max_scrub_restores:
                 self._consecutive_scrub_restores += 1
                 self.log(f"[reliability] step {self.step}: "
-                         f"{int(report.uncorrectable)} uncorrectable blocks -> restore")
+                         f"{uncorrectable} uncorrectable blocks -> restore")
                 return self.restore()
             # the same replay window keeps producing uncorrectable blocks:
             # restoring again cannot help, so accept the best-effort
@@ -299,6 +328,12 @@ class TrainLoop:
                 if c.scrub_every and self.step % c.scrub_every == 0:
                     if self._scrub():
                         continue   # restored: step rolled back, re-enter loop
+            if self.eval_fn is not None and c.eval_every \
+                    and self.step % c.eval_every == 0:
+                # post-scrub, so the store the eval sees is the corrected
+                # one; results stay on device (fetch after training)
+                self.eval_history.append(
+                    self.eval_fn(self.state["params"], self.step))
             if (c.checkpoint_every and self.step % c.checkpoint_every == 0) \
                     or decision == Decision.CHECKPOINT_NOW:
                 self.save()

@@ -47,7 +47,7 @@ def test_preemption_restart_resumes_from_checkpoint(tmp_path):
 
 def test_ecc_scrub_in_loop_corrects_injected_flips(tmp_path):
     loop = _toy_loop(tmp_path, scrub_every=4, inject_p_bit=1e-4)
-    loop.attach_ecc()
+    loop.attach_scheme()
     loop.run()
     assert len(loop.scrub_reports) == 5
     total_fixed = sum(int(r.corrected) + int(r.parity_fixed)
@@ -68,7 +68,7 @@ def test_heavy_corruption_terminates_via_restore_limit(tmp_path):
     PRNG key), livelocking run().  Fresh draws per restore plus the
     consecutive-restore cap must guarantee termination."""
     loop = _toy_loop(tmp_path, total=12, scrub_every=2, inject_p_bit=0.2)
-    loop.attach_ecc()
+    loop.attach_scheme()
     out = loop.run()                 # must terminate
     assert out["final_step"] == 12
     assert loop._consecutive_scrub_restores <= loop.cfg.max_scrub_restores
@@ -79,7 +79,7 @@ def test_restore_with_legacy_parity_layout_reencodes(tmp_path):
     """Pre-arena checkpoints stored parity as a per-leaf pytree; restore
     must fall back to re-encoding instead of crashing."""
     loop = _toy_loop(tmp_path, scrub_every=4)
-    loop.attach_ecc()
+    loop.attach_scheme()
     loop.run()
     # rewrite the newest snapshot with a legacy-style per-leaf parity dict
     snap = loop.ckpt.restore()
@@ -96,10 +96,10 @@ def test_fresh_process_restore_rearms_ecc(tmp_path):
     """Regression: a restore in a fresh process (store is None) must re-arm
     the scrub engine from the snapshot's parity, not silently drop ECC."""
     loop = _toy_loop(tmp_path, scrub_every=4)
-    loop.attach_ecc()
+    loop.attach_scheme()
     with pytest.raises(RuntimeError):
         loop.run(fail_at=13)
-    loop2 = _toy_loop(tmp_path, scrub_every=4)   # fresh process: no attach_ecc
+    loop2 = _toy_loop(tmp_path, scrub_every=4)   # fresh process: no attach_scheme
     assert loop2.restore()
     assert loop2.store is not None
     _, rep = loop2.store.scrub()                 # parity matches the params
@@ -130,7 +130,7 @@ def test_kernel_scrub_corrects_single_flips_in_loop(tmp_path):
 
     loop = _toy_loop(tmp_path / "ecc", total=12, scrub_every=4)
     loop.inject_fn = inject
-    loop.attach_ecc()
+    loop.attach_scheme()
     assert loop.store.backend == "kernel"
     out = loop.run()
     assert flips == [4, 8, 12]
@@ -158,7 +158,7 @@ def test_uncorrectable_block_triggers_checkpoint_restore(tmp_path):
     loop = _toy_loop(tmp_path, total=20, scrub_every=4)
     loop.inject_fn = inject
     loop.log = logs.append
-    loop.attach_ecc()
+    loop.attach_scheme()
     out = loop.run()
     assert out["final_step"] == 20
     assert any("uncorrectable" in l for l in logs)

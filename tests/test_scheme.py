@@ -56,12 +56,6 @@ def test_registry_resolution_order(monkeypatch):
     assert backend.resolve("diag_parity") == "jnp"
     assert backend.resolve("tmr_vote") == "jnp"
     assert backend.resolve("netlist_exec") == "level"   # no jnp impl: default
-    # deprecated netlist env var still honored, REPRO_IMPL wins over it
-    monkeypatch.delenv("REPRO_IMPL")
-    monkeypatch.setenv("REPRO_NETLIST_IMPL", "scan")
-    assert backend.resolve("netlist_exec") == "scan"
-    monkeypatch.setenv("REPRO_IMPL", "netlist_exec=kernel")
-    assert backend.resolve("netlist_exec") == "kernel"
     # ...including in its bare-token form
     monkeypatch.setenv("REPRO_IMPL", "scan")
     assert backend.resolve("netlist_exec") == "scan"
@@ -397,10 +391,23 @@ def test_train_loop_fresh_process_rearms_copy_scheme(tmp_path):
     assert len(loop2.scrub_reports) > 0           # scrubbing continued
 
 
-def test_train_loop_legacy_ecc_backend_field(tmp_path):
-    loop = _toy_loop(tmp_path, None, ecc_backend="jnp")
-    loop.attach_ecc()
+def test_removed_shims_raise_with_migration_hint(tmp_path, monkeypatch):
+    """The one-release PR-4 shims are gone: each removed name must raise
+    with a hint at the replacement (grep-clean removal, not silent)."""
+    # TrainLoop.attach_ecc -> attach_scheme
+    loop = _toy_loop(tmp_path, parse_scheme("ecc"))
+    with pytest.raises(AttributeError, match="attach_scheme"):
+        loop.attach_ecc()
+    # LoopConfig(ecc_backend=...) -> scheme=DiagParityEcc(impl=...)
+    with pytest.raises(TypeError, match="DiagParityEcc"):
+        LoopConfig(ecc_backend="jnp")
+    # REPRO_NETLIST_IMPL env -> REPRO_IMPL=netlist_exec=...
+    monkeypatch.setenv("REPRO_NETLIST_IMPL", "scan")
+    with pytest.raises(RuntimeError, match="REPRO_IMPL=netlist_exec=scan"):
+        backend.resolve("netlist_exec")
+    monkeypatch.delenv("REPRO_NETLIST_IMPL")
+    # the loop still works through the supported surface
+    loop.attach_scheme()
     assert isinstance(loop.scheme, DiagParityEcc)
-    assert loop.store is not None and loop.store.backend == "jnp"
     loop.run()
     assert len(loop.scrub_reports) == 3

@@ -39,7 +39,7 @@ def test_train_loop_with_ecc_and_restart(tmp_path, small_lm):
                                 scrub_every=4, log_every=0,
                                 inject_p_bit=1e-6),
                      ckpt=ck, log=lambda *_: None)
-    loop.attach_ecc()
+    loop.attach_scheme()
     with pytest.raises(RuntimeError):
         loop.run(fail_at=10)
     loop2 = TrainLoop(ts, init_train_state(params),
