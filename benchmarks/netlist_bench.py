@@ -13,6 +13,13 @@ their cost includes identical mask sampling and the speedup isolates the
 execution engine.  Smoke mode (REPRO_BENCH_SMOKE=1) shrinks the iteration
 count but keeps the 32-bit / 512-trial headline row so the
 speedup-over-scan measurement stays comparable across CI runs.
+
+The kernel rows also sweep `tile_tw` (packed-trial words per grid step) —
+the knob ROADMAP item 4 asked about for the kernel-vs-level gap.  The
+verdict (DESIGN.md §11): no tile shape closes it on CPU, because the gap
+is interpret-mode dispatch (one Python-level grid-step loop per level x
+trial-tile), not tiling — which is why the registry default for
+`netlist_exec` is `level`.
 """
 from __future__ import annotations
 
@@ -99,6 +106,29 @@ def run() -> list:
         rows.append((f"netlist.exec_iid_{impl}_{tag}", secs_iid[impl] * 1e6,
                      f"gate_evals_per_s={evals / secs_iid[impl]:.3e} "
                      f"speedup_vs_scan={secs_iid['scan'] / secs_iid[impl]:.1f}x"))
+
+    # tile_tw sweep for the packed kernel (ROADMAP item 4): is the
+    # kernel-vs-level gap a grid-shape artifact?  Each tile_tw is verified
+    # bit-exact, timed fault-free, and the best variant is recorded; the
+    # sweep shows the gap survives every tile shape on CPU (DESIGN.md §11).
+    if "kernel" in IMPLS:
+        from repro.kernels.netlist_exec import execute_packed
+        packed = multpim._pack_inputs(a, b, N_BITS)
+        tiles = (4, 16) if SMOKE else (1, 2, 4, 8, 16)
+        best_tile, best_s = None, None
+        for t in tiles:
+            f = jax.jit(lambda x, t=t: execute_packed(nl, x, tile_tw=t))
+            got = np.asarray(f(packed))
+            assert (got == want).all(), f"kernel tile_tw={t} diverges"
+            s = _time(f, packed)
+            rows.append((f"netlist.exec_kernel_tile{t}_{tag}", s * 1e6,
+                         f"gate_evals_per_s={evals / s:.3e}"))
+            if best_s is None or s < best_s:
+                best_tile, best_s = t, s
+        rows.append((f"netlist.kernel_tile_sweep_{tag}", 0.0,
+                     f"best_tile_tw={best_tile} "
+                     f"gate_evals_per_s={evals / best_s:.3e} "
+                     f"vs_level={secs['level'] / best_s:.2f}x"))
 
     best = min(secs, key=secs.get)
     rows.append((f"netlist.best_speedup_{tag}", 0.0,

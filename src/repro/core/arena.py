@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["BLOCK", "LeafSpec", "ArenaSpec", "leaf_to_words", "words_to_leaf",
-           "pack", "unpack", "arena_spec"]
+           "pack", "unpack", "arena_spec", "canonical_parts"]
 
 BLOCK = 32  # words per ECC block == bits per word
 
@@ -121,6 +121,28 @@ def arena_spec(params: Any) -> ArenaSpec:
     return ArenaSpec(leaves=tuple(specs), treedef=treedef, n_words=offset)
 
 
+def canonical_parts(parts):
+    """Make a list of arrays safe to `jnp.concatenate` on a multi-device
+    mesh: concatenating eager arrays with MIXED shardings miscompiles on
+    multi-device backends (an unreduced cross-replica sum lands in the
+    output — every value doubles per replicated mesh axis; observed on
+    jax 0.4.37 CPU both eagerly and under jit), while same-sharding
+    concatenation is correct.  Canonicalize every part onto one
+    replicated sharding first; no-op under tracing or when all parts
+    already share a sharding."""
+    if any(isinstance(p, jax.core.Tracer) for p in parts):
+        return parts
+    shardings = {p.sharding for p in parts}
+    if len(shardings) <= 1:
+        return parts
+    from jax.sharding import NamedSharding, PartitionSpec
+    mesh = next((s.mesh for s in shardings
+                 if isinstance(s, NamedSharding)), None)
+    common = parts[0].sharding if mesh is None \
+        else NamedSharding(mesh, PartitionSpec())
+    return [jax.device_put(p, common) for p in parts]
+
+
 def pack(params: Any) -> Tuple[jax.Array, ArenaSpec]:
     """Flatten a pytree into (arena_u32, spec); one concatenate, jit-safe."""
     spec = arena_spec(params)
@@ -133,7 +155,7 @@ def pack(params: Any) -> Tuple[jax.Array, ArenaSpec]:
         parts.append(w)
     if not parts:
         return jnp.zeros((0,), jnp.uint32), spec
-    return jnp.concatenate(parts), spec
+    return jnp.concatenate(canonical_parts(parts)), spec
 
 
 def unpack(arena: jax.Array, spec: ArenaSpec) -> Any:

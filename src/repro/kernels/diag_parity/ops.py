@@ -8,7 +8,7 @@ is identically clean, so they never contribute to the stats.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,3 +58,23 @@ def scrub(buf: jax.Array, parity: jax.Array,
         words, parity, slopes=tuple(slopes), block_m=block_m,
         interpret=use_interpret() if interpret is None else interpret)
     return fixed[:n].reshape(-1), par2[:n], stats.sum(axis=0)
+
+
+def scrub_sharded(buf: jax.Array, parity: jax.Array,
+                  slopes: Tuple[int, ...] = (1, 2, -1), block_m: int = 256,
+                  interpret: bool | None = None, *, mesh=None,
+                  axes: Sequence[str] = ("copy", "data", "model"),
+                  local_scrub: Optional[Callable] = None):
+    """`scrub` with the arena block axis shard_map'd across `mesh` and the
+    (3,) counts psum-reduced (DESIGN.md §14).  Bit-exact vs `scrub` — the
+    op is block-local, so per-shard launches compose exactly.  With
+    mesh=None (or a 1-device mesh) this IS `scrub`.  `local_scrub`
+    overrides the per-shard op (backend registry passes the jnp oracle)."""
+    if local_scrub is None:
+        def local_scrub(b, p):
+            return scrub(b, p, slopes=tuple(slopes), block_m=block_m,
+                         interpret=interpret)
+    if mesh is None:
+        return local_scrub(buf, parity)
+    from ..sharded import shard_scrub
+    return shard_scrub(local_scrub, mesh, axes, buf, parity)

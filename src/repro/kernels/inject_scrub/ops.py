@@ -8,7 +8,7 @@ syndrome is identically clean and they contribute nothing to the stats.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,3 +43,23 @@ def inject_scrub(buf: jax.Array, parity: jax.Array, mask: jax.Array,
         words, parity, mwords, slopes=tuple(slopes), block_m=block_m,
         interpret=use_interpret() if interpret is None else interpret)
     return fixed[:n].reshape(-1), par2[:n], stats.sum(axis=0)
+
+
+def inject_scrub_sharded(buf: jax.Array, parity: jax.Array, mask: jax.Array,
+                         slopes: Tuple[int, ...] = (1, 2, -1),
+                         block_m: int = 256, interpret: bool | None = None,
+                         *, mesh=None,
+                         axes: Sequence[str] = ("copy", "data", "model"),
+                         local_op: Optional[Callable] = None):
+    """`inject_scrub` with the arena block axis shard_map'd across `mesh`
+    and the (4,) counts psum-reduced (DESIGN.md §14).  The mask shards with
+    the buffer, so each shard corrupts and repairs only the blocks it owns;
+    bit-exact vs `inject_scrub`.  With mesh=None this IS `inject_scrub`."""
+    if local_op is None:
+        def local_op(b, p, m):
+            return inject_scrub(b, p, m, slopes=tuple(slopes),
+                                block_m=block_m, interpret=interpret)
+    if mesh is None:
+        return local_op(buf, parity, mask)
+    from ..sharded import shard_scrub
+    return shard_scrub(local_op, mesh, axes, buf, parity, mask)

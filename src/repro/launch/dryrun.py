@@ -126,6 +126,71 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return result
 
 
+def run_engine_cell(arch: str, scheme_spec: str = "tmr-parallel",
+                    batch: int = 20, prompt_len: int = 64,
+                    gen: int = 8) -> Dict[str, Any]:
+    """Lower + compile the sharded generation engine's hot program on the
+    dedicated TMR serving mesh (copy=3 x data=5 x model=16 — 240 chips of a
+    256-chip pod, DESIGN.md §14) with abstract sharded inputs: proves the
+    copy-folded store, KV caches and cross-replica vote collectives produce
+    a coherent program and reports its per-device memory/collective
+    footprint without allocating a single parameter."""
+    from jax.sharding import NamedSharding
+
+    from ..models.params import abstractify, partition_specs
+    from ..models.transformer import model_specs
+    from ..optim.sharding_rules import copy_stack_pspec
+    from ..pshard import spec_for
+    from ..reliability import parse_scheme
+    from .engine import GenerationEngine
+    from .mesh import make_tmr_serving_mesh
+
+    mesh = make_tmr_serving_mesh()
+    cfg = get_config(arch)
+    engine = GenerationEngine(cfg, parse_scheme(scheme_spec), gen=gen,
+                              mesh=mesh)
+    emesh, rules = engine.exec_mesh, engine.rules
+    with use_mesh_and_rules(emesh, rules):
+        specs = model_specs(cfg)
+        one = abstractify(specs, emesh, rules=rules)
+        pspecs = partition_specs(specs, emesh, rules)
+        store = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(
+                (3,) + a.shape, a.dtype,
+                sharding=NamedSharding(emesh, copy_stack_pspec(
+                    s, emesh, rules=rules))),
+            one, pspecs)
+        tokens = jax.ShapeDtypeStruct(
+            (batch, prompt_len), jnp.int32,
+            sharding=NamedSharding(emesh, spec_for(
+                (batch, prompt_len), ("batch", None), emesh, rules)))
+        fns = engine._build(prompt_len)
+        fn = fns["tmr_scan"] if engine.copy_axis else fns["single_scan"]
+        t0 = time.time()
+        lowered = fn.lower(store, {"tokens": tokens})
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    colls = parse_collectives(compiled.as_text())
+    return {
+        "arch": arch, "cell": "engine", "scheme": scheme_spec,
+        "mesh": dict(emesh.shape), "devices": int(emesh.devices.size),
+        "batch": batch, "prompt_len": prompt_len, "gen": gen,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "peak_bytes": int(ma.argument_size_in_bytes
+                          + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                          - ma.alias_size_in_bytes),
+        "collectives": {
+            "per_op_bytes": colls.per_op_bytes,
+            "per_op_count": colls.per_op_count,
+            "link_traffic_bytes": colls.link_traffic_bytes(),
+        },
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="all", help="arch id or 'all'")
@@ -137,7 +202,30 @@ def main() -> None:
     ap.add_argument("--rules", default=None,
                     help='JSON sharding-rule overrides, e.g. \'{"kv_seq": []}\'')
     ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--engine-cell", action="store_true",
+                    help="lower the sharded generation engine (tmr_scan) on "
+                         "the copy x data x model TMR serving mesh instead "
+                         "of the train/prefill/decode cells")
+    ap.add_argument("--scheme", default="tmr-parallel",
+                    help="protection scheme for --engine-cell")
     args = ap.parse_args()
+
+    if args.engine_cell:
+        arch = "phi3-mini-3.8b" if args.arch == "all" else args.arch
+        tag = f"{arch} x engine[{args.scheme}] x 3x5x16"
+        try:
+            res = run_engine_cell(arch, args.scheme)
+        except Exception as e:
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+            sys.exit(1)
+        gb = res["peak_bytes"] / 2**30
+        print(f"[ OK ] {tag}: peak {gb:.2f} GiB/dev, "
+              f"collectives {res['collectives']['per_op_count']}, "
+              f"compile {res['compile_s']}s", flush=True)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(res) + "\n")
+        sys.exit(0)
 
     archs = list_archs() if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]

@@ -23,6 +23,12 @@ compiled generation under any protection scheme:
 * **zero-sync telemetry** — every scrub/vote report stays on device as
   stacked counters inside the returned telemetry dict; `fetch_telemetry`
   performs the single host transfer after timing stops.
+* **mesh execution** — constructed with ``mesh=``, the engine shards the
+  store/caches/batch via the logical-axis rules, folds the TMR copy axis
+  onto data-replica groups (`launch.mesh.fold_copy_axis`) so parallel
+  disciplines reuse replicas that already exist, and runs arena scrubs as
+  per-shard shard_map launches with psum'd counters (DESIGN.md §14) —
+  bit-exact against the single-device engine under identical fault keys.
 
 Typical use (serve.py, serve_bench.py, examples/serve_tmr.py)::
 
@@ -41,11 +47,18 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import NamedSharding
+
 from ..models.config import ModelConfig
+from ..models.params import partition_specs
 from ..models.steps import make_decode_step, make_prefill_step
+from ..models.transformer import model_specs
+from ..optim.sharding_rules import copy_stack_pspec
+from ..pshard import DEFAULT_RULES, ShardingRules, use_mesh_and_rules
 from ..reliability.scheme import (Compose, DiagParityEcc, Scheme, Tmr,
                                   Unprotected)
 from ..core import arena
+from .mesh import fold_copy_axis
 
 __all__ = ["GenerationEngine", "fetch_telemetry", "make_eval_hook"]
 
@@ -88,12 +101,21 @@ class GenerationEngine:
                   (requires vote_every > 0).
     execution   : 'scan' (compiled, default) or 'loop' (interpreted
                   reference) — what `generate()` dispatches to.
+    mesh        : optional jax Mesh — shard the store, KV caches and
+                  batch over it (DESIGN.md §14).  Concurrent TMR
+                  disciplines fold the copy axis onto data replica groups
+                  when `data % 3 == 0` (`launch.mesh.fold_copy_axis`);
+                  arena scrubs run shard-wise with psum'd counters.
+                  Bit-exact vs mesh=None under identical fault keys.
+    rules       : ShardingRules for logical-axis resolution on `mesh`
+                  (default DEFAULT_RULES).
     """
 
     def __init__(self, cfg: ModelConfig, scheme: Optional[Scheme] = None, *,
                  gen: int, cache_len: Optional[int] = None,
                  vote_every: int = 0, vote_cache: bool = False,
-                 execution: str = "scan"):
+                 execution: str = "scan", mesh=None,
+                 rules: Optional[ShardingRules] = None):
         if execution not in ("scan", "loop"):
             raise ValueError(f"execution must be 'scan' or 'loop', "
                              f"got {execution!r}")
@@ -122,6 +144,8 @@ class GenerationEngine:
         self.vote_every = int(vote_every)
         self.vote_cache = bool(vote_cache)
         self.execution = execution
+        self.mesh = mesh
+        self.rules = rules if rules is not None else DEFAULT_RULES
         self._built: Dict[int, Any] = {}   # prompt_len -> compiled fns
 
     # -- scheme plumbing ----------------------------------------------------
@@ -142,6 +166,55 @@ class GenerationEngine:
         tmr = self._tmr()
         return tmr.discipline if tmr is not None else None
 
+    # -- mesh plumbing (DESIGN.md §14) --------------------------------------
+
+    @property
+    def exec_mesh(self):
+        """Mesh the compiled programs actually run under.  Concurrent TMR
+        disciplines fold the copy axis onto data replica groups when the
+        data axis can host the three copies; the serial discipline (one
+        copy in flight at a time) and non-copy schemes keep the
+        constructor mesh."""
+        if self.mesh is None:
+            return None
+        if self.copy_axis and self._discipline() != "serial":
+            folded = fold_copy_axis(self.mesh)
+            if folded is not None:
+                return folded
+        return self.mesh
+
+    def _param_shardings(self, stacked: bool):
+        """NamedSharding tree for the serving store on the exec mesh:
+        `partition_specs` resolution of the model's logical axes, with the
+        leading 3-copy axis prepended (sharded over the "copy" axis on a
+        folded mesh, replicated otherwise) when `stacked`."""
+        mesh = self.exec_mesh
+        pspecs = partition_specs(model_specs(self.cfg), mesh, self.rules)
+        if stacked:
+            pspecs = jax.tree.map(
+                lambda s: copy_stack_pspec(s, mesh, rules=self.rules), pspecs)
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    def shard_store(self, store: Any) -> Any:
+        """Place a prepared store on the engine's exec mesh (no-op without
+        one).  `prepare` calls this; it is public so externally built
+        stores (checkpoint restores) can be placed the same way."""
+        if self.mesh is None:
+            return store
+        return jax.device_put(
+            store, self._param_shardings(stacked=self.copy_axis))
+
+    def _shard_batch(self, batch: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        if self.mesh is None:
+            return batch
+        mesh = self.exec_mesh
+        from ..pshard import spec_for
+        return {
+            k: jax.device_put(v, NamedSharding(mesh, spec_for(
+                v.shape, ("batch",) + (None,) * (v.ndim - 1), mesh,
+                self.rules)))
+            for k, v in batch.items()}
+
     def prepare(self, params: Any, key: Optional[jax.Array] = None,
                 fault=None, dt: float = 1.0) -> Tuple[Any, Dict[str, Any]]:
         """Build the scheme's serving store from clean params.
@@ -156,32 +229,47 @@ class GenerationEngine:
 
         Returns (store, prep_telemetry); the telemetry values are
         on-device scalars (fetch once via `fetch_telemetry`).
+
+        With a mesh, the finished store is placed by `shard_store` and the
+        arena scrubs run shard-wise (`scrub_sharded`) with psum'd counters
+        — same bits, same counts as the single-device path.
         """
         scheme = self.scheme
+        mesh = self.exec_mesh
 
         def corrupt(i: int) -> Any:
             if fault is None:
                 return params
             return fault.corrupt(params, jax.random.fold_in(key, 100 + i), dt)
 
-        if isinstance(scheme, Unprotected):
-            return corrupt(0), {}
-        if isinstance(scheme, DiagParityEcc):
-            prot = scheme.protect(params)
-            fixed, rep = scheme.scrub(scheme.adopt(corrupt(0),
-                                                   prot.redundancy))
-            return fixed.payload, {"ecc_corrected": rep.corrected,
-                                   "ecc_uncorrectable": rep.uncorrectable}
-        if isinstance(scheme, Tmr):
-            return _stack_copies([corrupt(i) for i in range(3)]), {}
-        if isinstance(scheme, Compose):
-            buf, spec = arena.pack(params)
-            parity = scheme.ecc._op().encode(buf, slopes=scheme.ecc.slopes)
-            packed = [arena.pack(corrupt(i))[0] for i in range(3)]
-            bufs, _, counts = scheme.ecc.scrub_copies(packed, [parity] * 3)
-            copies = [arena.unpack(b, spec) for b in bufs]
-            return _stack_copies(copies), {"ecc_corrected": counts[0],
-                                           "ecc_uncorrectable": counts[2]}
+        def place(store, telem):
+            return self.shard_store(store), telem
+
+        with use_mesh_and_rules(mesh, self.rules):
+            if isinstance(scheme, Unprotected):
+                return place(corrupt(0), {})
+            if isinstance(scheme, DiagParityEcc):
+                prot = scheme.protect(params)
+                fixed, rep = scheme.scrub(scheme.adopt(corrupt(0),
+                                                       prot.redundancy),
+                                          mesh=mesh)
+                return place(fixed.payload,
+                             {"ecc_corrected": rep.corrected,
+                              "ecc_uncorrectable": rep.uncorrectable})
+            if isinstance(scheme, Tmr):
+                return place(_stack_copies([corrupt(i) for i in range(3)]),
+                             {})
+            if isinstance(scheme, Compose):
+                buf, spec = arena.pack(params)
+                parity = scheme.ecc._op().encode(buf,
+                                                 slopes=scheme.ecc.slopes)
+                packed = [arena.pack(corrupt(i))[0] for i in range(3)]
+                bufs, _, counts = scheme.ecc.scrub_copies(
+                    packed, [parity] * 3, mesh=mesh)
+                copies = [arena.unpack(b, spec) for b in bufs]
+                return place(_stack_copies(copies),
+                             {"ecc_corrected": counts[0],
+                              "ecc_uncorrectable": counts[2]})
         raise ValueError(f"unhandled scheme {scheme!r}")
 
     # -- compiled paths -----------------------------------------------------
@@ -212,11 +300,14 @@ class GenerationEngine:
             return jnp.concatenate([tok0, toks[:, :, 0].T], axis=1), {}
 
         # concurrent copy-axis evaluator for 'parallel'/'semi_parallel':
-        # vmap prefill+scan over the stacked copies (one batched launch; on
-        # a real mesh the axis shards over replica groups / folds into row
-        # capacity).  The 'serial' discipline never enters this path — it
-        # re-runs the single-copy scan per copy (generate_scan), keeping
-        # the paper's 1x-area property: no 3x activations/cache in flight.
+        # vmap prefill+scan over the stacked copies (one batched launch).
+        # On a copy-folded mesh (exec_mesh) the stacked axis is sharded
+        # over three disjoint replica groups — each group runs ONE copy —
+        # and the per-step vote/disagreement reads become tiny cross-
+        # replica collectives on the token ids (DESIGN.md §14).  The
+        # 'serial' discipline never enters this path — it re-runs the
+        # single-copy scan per copy (generate_scan), keeping the paper's
+        # 1x-area property: no 3x activations/cache in flight.
         def tmr_scan(stacked, batch):
             tok3, _, cache3 = jax.vmap(
                 lambda p: prefill(p, batch))(stacked)
@@ -292,52 +383,58 @@ class GenerationEngine:
         axis; the serial discipline re-runs the same compiled program per
         copy (3x latency, 1x in-flight activations/cache) and votes the
         three token sequences."""
-        fns = self._build(batch["tokens"].shape[1])
-        if not self.copy_axis:
-            return fns["single_scan"](store, batch)
-        if self._discipline() == "serial":
-            outs = [fns["single_scan"](_copy(store, i), batch)[0]
-                    for i in range(3)]
-            voted = self._tmr()._vote()(*outs)
-            return voted, {"tmr_final_disagreements":
-                           _disagreements(jnp.stack(outs))}
-        return fns["tmr_scan"](store, batch)
+        with use_mesh_and_rules(self.exec_mesh, self.rules):
+            batch = self._shard_batch(batch)
+            fns = self._build(batch["tokens"].shape[1])
+            if not self.copy_axis:
+                return fns["single_scan"](store, batch)
+            if self._discipline() == "serial":
+                outs = [fns["single_scan"](_copy(store, i), batch)[0]
+                        for i in range(3)]
+                voted = self._tmr()._vote()(*outs)
+                return voted, {"tmr_final_disagreements":
+                               _disagreements(jnp.stack(outs))}
+            return fns["tmr_scan"](store, batch)
 
     def generate_loop(self, store, batch):
         """Interpreted reference: jitted prefill + per-token decode
         launches; TMR as three sequential full generations with one final
         vote (the legacy serving path — the bit-exactness oracle)."""
-        fns = self._build(batch["tokens"].shape[1])
+        with use_mesh_and_rules(self.exec_mesh, self.rules):
+            batch = self._shard_batch(batch)
+            fns = self._build(batch["tokens"].shape[1])
 
-        def one(params):
-            tok, _, cache = fns["prefill"](params, batch)
-            toks = [tok]
-            for _ in range(self.gen - 1):
-                tok, _, cache = fns["decode"](params, tok, cache)
-                toks.append(tok)
-            return jnp.concatenate(toks, axis=1)
+            def one(params):
+                tok, _, cache = fns["prefill"](params, batch)
+                toks = [tok]
+                for _ in range(self.gen - 1):
+                    tok, _, cache = fns["decode"](params, tok, cache)
+                    toks.append(tok)
+                return jnp.concatenate(toks, axis=1)
 
-        if not self.copy_axis:
-            return one(store), {}
-        outs = [one(_copy(store, i)) for i in range(3)]
-        seq3 = jnp.stack(outs)
-        voted = self._tmr()._vote()(*outs)
-        return voted, {"tmr_final_disagreements": _disagreements(seq3)}
+            if not self.copy_axis:
+                return one(store), {}
+            outs = [one(_copy(store, i)) for i in range(3)]
+            seq3 = jnp.stack(outs)
+            voted = self._tmr()._vote()(*outs)
+            return voted, {"tmr_final_disagreements": _disagreements(seq3)}
 
     def ttft(self, store, batch) -> jax.Array:
         """First generated token(s) only — the prefill launch.  Time this
         (after warmup) for time-to-first-token."""
-        fns = self._build(batch["tokens"].shape[1])
-        if not self.copy_axis:
-            tok, _, _ = fns["prefill"](store, batch)
-            return tok
-        if self._discipline() == "serial":
-            toks = [fns["prefill"](_copy(store, i), batch)[0]
-                    for i in range(3)]
-        else:
-            tok3, _, _ = fns["tmr_prefill"](store, batch)
-            toks = [tok3[0], tok3[1], tok3[2]]
-        return self._tmr()._vote()(*toks)
+        with use_mesh_and_rules(self.exec_mesh, self.rules):
+            batch = self._shard_batch(batch)
+            fns = self._build(batch["tokens"].shape[1])
+            if not self.copy_axis:
+                tok, _, _ = fns["prefill"](store, batch)
+                return tok
+            if self._discipline() == "serial":
+                toks = [fns["prefill"](_copy(store, i), batch)[0]
+                        for i in range(3)]
+            else:
+                tok3, _, _ = fns["tmr_prefill"](store, batch)
+                toks = [tok3[0], tok3[1], tok3[2]]
+            return self._tmr()._vote()(*toks)
 
 
 def make_eval_hook(engine: GenerationEngine, batch: Dict[str, jax.Array]
@@ -349,8 +446,9 @@ def make_eval_hook(engine: GenerationEngine, batch: Dict[str, jax.Array]
     params — one launch per eval, tokens left on device (the loop keeps
     them in `eval_history`; fetch after training)."""
     def eval_fn(params: Any, step: int) -> Dict[str, Any]:
-        fns = engine._build(batch["tokens"].shape[1])
-        tokens, _ = fns["single_scan"](params, batch)
+        with use_mesh_and_rules(engine.exec_mesh, engine.rules):
+            fns = engine._build(batch["tokens"].shape[1])
+            tokens, _ = fns["single_scan"](params, batch)
         return {"step": step, "tokens": tokens}
 
     return eval_fn

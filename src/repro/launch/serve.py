@@ -43,6 +43,7 @@ from ..models import transformer as T
 from ..reliability import Compose, DiagParityEcc, Tmr, Unprotected, \
     parse_scheme
 from .engine import GenerationEngine, fetch_telemetry
+from .mesh import make_test_mesh
 
 
 def main() -> None:
@@ -58,6 +59,12 @@ def main() -> None:
     ap.add_argument("--engine", default="scan", choices=["scan", "loop"],
                     help="scan: one compiled prefill+scan launch (default);"
                          " loop: interpreted per-token reference path")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="shard the engine over a DATAxMODEL device mesh "
+                         "(e.g. 2x2; DESIGN.md §14).  TMR copy axes fold "
+                         "onto data replica groups when data %% 3 == 0.  "
+                         "On CPU force devices first: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--vote-every", type=int, default=0,
                     help="TMR/Compose: vote token ids across copies every k "
                          "decode steps inside the scan (0 = only at the end)")
@@ -118,10 +125,19 @@ def main() -> None:
         "drift": RetentionDrift(args.inject_p_bit),
     }[args.fault]
 
+    mesh = None
+    if args.mesh:
+        try:
+            data, model = (int(t) for t in args.mesh.lower().split("x"))
+        except ValueError:
+            ap.error(f"--mesh expects DATAxMODEL (e.g. 2x2), got "
+                     f"{args.mesh!r}")
+        mesh = make_test_mesh(data, model)
+
     engine = GenerationEngine(cfg, scheme, gen=args.gen,
                               vote_every=args.vote_every,
                               vote_cache=args.vote_cache,
-                              execution=args.engine)
+                              execution=args.engine, mesh=mesh)
     store, prep = engine.prepare(
         params, key=key, fault=fault if args.inject_p_bit else None)
     # keep compile and prepare's async corrupt/scrub launches out of the
@@ -144,7 +160,10 @@ def main() -> None:
     ref = clean.generate(params, batch)[0] if args.inject_p_bit else out
     agree = float(np.asarray(out == ref).mean())
     tok_s = args.batch * args.gen / dt
+    mesh_desc = "single" if mesh is None else \
+        "x".join(f"{a}={n}" for a, n in engine.exec_mesh.shape.items())
     print(f"[serve] {cfg.name} scheme={scheme.name} engine={args.engine} "
+          f"mesh={mesh_desc} "
           f"p_bit={args.inject_p_bit:g}: {args.batch}x{args.gen} tokens "
           f"in {dt:.1f}s ({tok_s:.1f} tok/s), "
           f"agreement with clean run: {agree:.3f}")

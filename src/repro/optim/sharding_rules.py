@@ -1,20 +1,28 @@
-"""ZeRO-1 sharding for optimizer state.
+"""Derived sharding rules: ZeRO-1 optimizer state + reliability placement.
 
 Parameters are TP-sharded over "model"; the Adam moments (2x fp32 the size
 of the params) would otherwise be replicated across the "data"/"pod" axes.
 We derive moment Specs from parameter Specs by assigning the largest
 physically-replicated dim the logical axis "zero" (mapped to the data axis
-in ShardingRules), so m/v shard over data — ZeRO stage 1."""
+in ShardingRules), so m/v shard over data — ZeRO stage 1.
+
+The reliability placement helpers (DESIGN.md §14) put redundancy where the
+data it protects lives: ECC parity tables shard their leading arena-block
+axis across the whole mesh (logical "arena_block"), and stacked TMR copies
+ride the "copy" mesh axis of a `launch.mesh.fold_copy_axis` mesh — each
+copy owns a disjoint replica group, so parallel TMR reuses data-parallel
+replicas instead of tripling any one device's work."""
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional
 
 import jax
+from jax.sharding import PartitionSpec as P
 
 from ..models.params import Spec
-from ..pshard import DEFAULT_RULES
+from ..pshard import DEFAULT_RULES, ShardingRules, spec_for
 
-__all__ = ["opt_spec_tree"]
+__all__ = ["opt_spec_tree", "parity_pspec", "copy_stack_pspec"]
 
 _REPLICATED = (None, "model_dim", "seq")  # logicals that resolve to ()
 
@@ -35,3 +43,29 @@ def opt_spec_tree(param_specs: Any) -> Any:
     """Spec tree for one Adam moment (m or v), ZeRO-1 sharded."""
     return jax.tree.map(_zero_shard, param_specs,
                         is_leaf=lambda x: isinstance(x, Spec))
+
+
+def parity_pspec(n_blocks: int, n_slopes: int, mesh,
+                 rules: Optional[ShardingRules] = None) -> P:
+    """PartitionSpec for an ECC parity table of shape (n_blocks, n_slopes):
+    the arena block axis shards across the whole mesh so each shard holds
+    exactly the parity rows of the arena blocks it scrubs (degrades to
+    replication when n_blocks doesn't divide)."""
+    return spec_for((n_blocks, n_slopes), ("arena_block", None), mesh, rules)
+
+
+def copy_stack_pspec(pspec: P, mesh, copies: int = 3,
+                     rules: Optional[ShardingRules] = None) -> P:
+    """PartitionSpec for a (copies, *shape) stacked-TMR-copy array: prepend
+    the "copy" logical axis to a per-copy spec.  On a fold_copy_axis mesh
+    the leading dim shards over the copy replica groups; on plain meshes
+    (no "copy" axis, or one whose size doesn't divide `copies`) it degrades
+    to replication — correct, just not free."""
+    rules = rules or DEFAULT_RULES
+    axes = tuple(a for a in rules.axes_for("copy") if a in mesh.axis_names)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if not axes or copies % total != 0:
+        return P(None, *pspec)
+    return P(axes if len(axes) > 1 else axes[0], *pspec)

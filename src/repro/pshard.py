@@ -53,6 +53,13 @@ DEFAULT_RULES = ShardingRules({
     "kv_seq": ("model",),     # decode KV caches: shard sequence when heads can't be
     "seq": (),
     "zero": ("data",),        # optimizer-state ZeRO-1 axis
+    # reliability placement (DESIGN.md §14): the TMR leading copy axis rides
+    # a "copy" mesh axis (present only on meshes folded by
+    # launch.mesh.fold_copy_axis — on plain data x model meshes the copies
+    # degrade to replication), and redundancy tables (ECC parity) shard
+    # their leading arena-block axis across the whole mesh.
+    "copy": ("copy",),
+    "arena_block": ("data", "model"),
 })
 
 

@@ -137,37 +137,63 @@ def dispatch(op: str, impl: Optional[str] = None) -> Callable:
 # --------------------------------------------------------------------------
 
 def _load_diag_parity_kernel():
-    from ..kernels.diag_parity import encode_parity, scrub
+    from ..kernels.diag_parity import encode_parity, scrub, scrub_sharded
 
     def encode(buf, slopes=(1, 2, -1)):
         return encode_parity(buf, slopes=tuple(slopes))
 
-    def scrub_(buf, parity, slopes=(1, 2, -1)):
+    def scrub_(buf, parity, slopes=(1, 2, -1), mesh=None):
+        if mesh is not None:
+            return scrub_sharded(buf, parity, slopes=tuple(slopes), mesh=mesh)
         return scrub(buf, parity, slopes=tuple(slopes))
 
     return SimpleNamespace(encode=encode, scrub=scrub_)
 
 
 def _load_diag_parity_jnp():
+    from ..kernels.diag_parity import scrub_sharded
     from ..kernels.diag_parity.ref import encode_parity_ref, scrub_ref
 
     def encode(buf, slopes=(1, 2, -1)):
         return encode_parity_ref(buf, slopes=tuple(slopes))
 
-    def scrub_(buf, parity, slopes=(1, 2, -1)):
-        return scrub_ref(buf, parity, slopes=tuple(slopes))
+    def scrub_(buf, parity, slopes=(1, 2, -1), mesh=None):
+        def local(b, p):
+            return scrub_ref(b, p, slopes=tuple(slopes))
+        if mesh is not None:
+            return scrub_sharded(buf, parity, slopes=tuple(slopes),
+                                 mesh=mesh, local_scrub=local)
+        return local(buf, parity)
 
     return SimpleNamespace(encode=encode, scrub=scrub_)
 
 
 def _load_inject_scrub_kernel():
-    from ..kernels.inject_scrub import inject_scrub
-    return inject_scrub
+    from ..kernels.inject_scrub import inject_scrub, inject_scrub_sharded
+
+    def run(buf, parity, mask, slopes=(1, 2, -1), mesh=None):
+        if mesh is not None:
+            return inject_scrub_sharded(buf, parity, mask,
+                                        slopes=tuple(slopes), mesh=mesh)
+        return inject_scrub(buf, parity, mask, slopes=tuple(slopes))
+
+    return run
 
 
 def _load_inject_scrub_jnp():
+    from ..kernels.inject_scrub import inject_scrub_sharded
     from ..kernels.inject_scrub.ref import inject_scrub_ref
-    return inject_scrub_ref
+
+    def run(buf, parity, mask, slopes=(1, 2, -1), mesh=None):
+        def local(b, p, m):
+            return inject_scrub_ref(b, p, m, slopes=tuple(slopes))
+        if mesh is not None:
+            return inject_scrub_sharded(buf, parity, mask,
+                                        slopes=tuple(slopes), mesh=mesh,
+                                        local_op=local)
+        return local(buf, parity, mask)
+
+    return run
 
 
 def _load_tmr_vote_kernel():

@@ -83,8 +83,8 @@ class Protected:
     def read(self) -> Any:
         return self.scheme.read(self)
 
-    def scrub(self) -> Tuple["Protected", ScrubReport]:
-        return self.scheme.scrub(self)
+    def scrub(self, mesh=None) -> Tuple["Protected", ScrubReport]:
+        return self.scheme.scrub(self, mesh=mesh)
 
     # pytree plumbing
     def tree_flatten(self):
@@ -101,6 +101,13 @@ class Protected:
 def _zero_report() -> ScrubReport:
     z = jnp.zeros((), jnp.int32)
     return ScrubReport(corrected=z, parity_fixed=z, uncorrectable=z)
+
+
+def _ns_tree(pspecs: Any, mesh) -> Any:
+    """PartitionSpec tree -> NamedSharding tree (specs are leaves)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
 
 
 def _vote_counts(a: Any, b: Any, c: Any) -> Tuple[jax.Array, jax.Array]:
@@ -144,12 +151,35 @@ class Scheme:
         (checkpoint restore) without re-encoding."""
         return Protected(payload, redundancy, self)
 
-    def scrub(self, prot: Protected) -> Tuple[Protected, ScrubReport]:
+    def scrub(self, prot: Protected,
+              mesh=None) -> Tuple[Protected, ScrubReport]:
+        """Verify/correct the redundancy.  With a mesh, arena-wide scrubs
+        run as per-shard shard_map launches with psum'd counters
+        (DESIGN.md §14) — bit-exact vs mesh=None."""
         raise NotImplementedError
 
     def read(self, prot: Protected) -> Any:
         """Decode/vote the protected payload back to a plain pytree."""
         return prot.payload
+
+    def shardings(self, payload: Any, pspecs: Any, mesh,
+                  rules=None) -> Protected:
+        """NamedSharding tree shaped like ``protect(payload)`` — pass to
+        `jax.device_put` to place a Protected store on `mesh`.
+
+        `payload` may be abstract (ShapeDtypeStructs); `pspecs` is its
+        PartitionSpec tree (e.g. from `models.params.partition_specs`).
+        Redundancy placement is scheme-aware: parity tables shard their
+        arena-block axis across the whole mesh, TMR copies shard exactly
+        like the payload they mirror (each copy lands on its replica group
+        when the engine later stacks them under a copy-axis spec).
+        """
+        return Protected(_ns_tree(pspecs, mesh),
+                         self._redundancy_shardings(payload, pspecs, mesh,
+                                                    rules), self)
+
+    def _redundancy_shardings(self, payload, pspecs, mesh, rules):
+        return None
 
     def corrupt_store(self, prot: Protected, model, key: jax.Array,
                       dt: float = 1.0) -> Protected:
@@ -180,7 +210,8 @@ class Unprotected(Scheme):
     def protect(self, payload: Any) -> Protected:
         return Protected(payload, None, self)
 
-    def scrub(self, prot: Protected) -> Tuple[Protected, ScrubReport]:
+    def scrub(self, prot: Protected,
+              mesh=None) -> Tuple[Protected, ScrubReport]:
         return prot, _zero_report()
 
     def overhead(self) -> CostReport:
@@ -214,18 +245,28 @@ class DiagParityEcc(Scheme):
         prot._packed = (buf, spec)
         return prot
 
-    def scrub(self, prot: Protected) -> Tuple[Protected, ScrubReport]:
+    def scrub(self, prot: Protected,
+              mesh=None) -> Tuple[Protected, ScrubReport]:
         buf, spec = prot._packed if prot._packed is not None \
             else arena.pack(prot.payload)
         fixed, par2, counts = self._op().scrub(buf, prot.redundancy,
-                                               slopes=self.slopes)
+                                               slopes=self.slopes, mesh=mesh)
         out = Protected(arena.unpack(fixed, spec), par2, self)
         out._packed = (fixed, spec)
         report = ScrubReport(corrected=counts[0], parity_fixed=counts[1],
                              uncorrectable=counts[2])
         return out, report
 
-    def scrub_copies(self, bufs, parities) -> Tuple[list, list, jax.Array]:
+    def _redundancy_shardings(self, payload, pspecs, mesh, rules):
+        from jax.sharding import NamedSharding
+        from ..optim.sharding_rules import parity_pspec
+        spec = arena.arena_spec(payload)
+        return NamedSharding(mesh, parity_pspec(spec.n_blocks,
+                                                len(self.slopes), mesh,
+                                                rules))
+
+    def scrub_copies(self, bufs, parities,
+                     mesh=None) -> Tuple[list, list, jax.Array]:
         """Scrub N same-layout packed copies in ONE fused launch.
 
         The word code is block-local (every 32-word block carries its own
@@ -242,8 +283,9 @@ class DiagParityEcc(Scheme):
         n = bufs[0].shape[0]
         nb = parities[0].shape[0]
         fixed, par2, counts = self._op().scrub(
-            jnp.concatenate(list(bufs)), jnp.concatenate(list(parities)),
-            slopes=self.slopes)
+            jnp.concatenate(arena.canonical_parts(list(bufs))),
+            jnp.concatenate(arena.canonical_parts(list(parities))),
+            slopes=self.slopes, mesh=mesh)
         return ([fixed[i * n:(i + 1) * n] for i in range(len(bufs))],
                 [par2[i * nb:(i + 1) * nb] for i in range(len(parities))],
                 counts)
@@ -291,7 +333,11 @@ class Tmr(Scheme):
         c1, c2 = prot.redundancy
         return jax.tree.map(vote, prot.payload, c1, c2)
 
-    def scrub(self, prot: Protected) -> Tuple[Protected, ScrubReport]:
+    def scrub(self, prot: Protected,
+              mesh=None) -> Tuple[Protected, ScrubReport]:
+        # voting is elementwise — under a mesh GSPMD keeps it shard-local,
+        # so there is no explicit shard_map path (mesh accepted for
+        # protocol uniformity)
         voted = self.read(prot)
         c1, c2 = prot.redundancy
         # three-way disagreements feed the runtime's RESTART path — the
@@ -301,6 +347,10 @@ class Tmr(Scheme):
                              parity_fixed=jnp.zeros((), jnp.int32),
                              uncorrectable=conflicts)
         return Protected(voted, (voted, voted), self), report
+
+    def _redundancy_shardings(self, payload, pspecs, mesh, rules):
+        ns = _ns_tree(pspecs, mesh)
+        return (ns, ns)
 
     def corrupt_store(self, prot: Protected, model, key: jax.Array,
                       dt: float = 1.0) -> Protected:
@@ -385,7 +435,8 @@ class Compose(Scheme):
         vote = self.tmr._vote()
         return jax.tree.map(vote, prot.payload, c1, c2)
 
-    def scrub(self, prot: Protected) -> Tuple[Protected, ScrubReport]:
+    def scrub(self, prot: Protected,
+              mesh=None) -> Tuple[Protected, ScrubReport]:
         # scrub and vote directly on the packed arenas: all three copies
         # share one layout, so the per-copy ECC pass is ONE fused launch
         # over the concatenated copies (scrub_copies) and the vote is three
@@ -399,7 +450,8 @@ class Compose(Scheme):
             buf, spec = prot._packed if i == 0 and prot._packed is not None \
                 else arena.pack(copy)
             packed.append(buf)
-        bufs, _, counts = self.ecc.scrub_copies(packed, (p0, p1, p2))
+        bufs, _, counts = self.ecc.scrub_copies(packed, (p0, p1, p2),
+                                                mesh=mesh)
         vbuf = self.tmr._vote()(*bufs)
         voted = arena.unpack(vbuf, spec)
         vpar = op.encode(vbuf, slopes=self.ecc.slopes)
@@ -422,6 +474,11 @@ class Compose(Scheme):
         return self.adopt(model.corrupt(prot.payload, k0, dt),
                           ((model.corrupt(c1, k1, dt),
                             model.corrupt(c2, k2, dt)), parities))
+
+    def _redundancy_shardings(self, payload, pspecs, mesh, rules):
+        ns = _ns_tree(pspecs, mesh)
+        pns = self.ecc._redundancy_shardings(payload, pspecs, mesh, rules)
+        return ((ns, ns), (pns, pns, pns))
 
     def overhead(self) -> CostReport:
         e, t = self.ecc.overhead(), self.tmr.overhead()

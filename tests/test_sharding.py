@@ -47,6 +47,39 @@ def test_rules_replace():
     assert DEFAULT_RULES.axes_for("kv_seq") == ("model",)
 
 
+def test_copy_axis_rule_degrades_without_copy_mesh():
+    # the "copy" logical axis resolves only on fold_copy_axis meshes;
+    # plain data x model meshes replicate the stacked copies
+    plain = FakeMesh({"data": 4, "model": 4})
+    spec = spec_for((3, 64), ("copy", None), plain, DEFAULT_RULES)
+    assert spec[0] is None
+    folded = FakeMesh({"copy": 3, "data": 2, "model": 4})
+    spec = spec_for((3, 64), ("copy", None), folded, DEFAULT_RULES)
+    assert spec[0] == "copy"
+
+
+def test_arena_block_rule_whole_mesh():
+    mesh = FakeMesh({"data": 4, "model": 4})
+    spec = spec_for((160, 3), ("arena_block", None), mesh, DEFAULT_RULES)
+    assert spec[0] == ("data", "model")
+    # indivisible block counts degrade to replication, never error
+    spec = spec_for((7, 3), ("arena_block", None), mesh, DEFAULT_RULES)
+    assert spec[0] is None
+
+
+def test_mesh_guard_names_xla_flags():
+    from repro.launch.mesh import make_test_mesh
+    with pytest.raises(ValueError,
+                       match="xla_force_host_platform_device_count"):
+        make_test_mesh(64, 64)   # no host exposes 4096 devices
+
+
+def test_fold_copy_axis_indivisible():
+    from repro.launch.mesh import fold_copy_axis, make_test_mesh
+    mesh = make_test_mesh(1, 1)
+    assert fold_copy_axis(mesh) is None   # data=1 cannot host 3 copies
+
+
 @pytest.mark.slow
 def test_mini_dryrun_8_devices(tmp_path):
     """Lower+compile a smoke config against a forced 8-device mesh in a
