@@ -1,14 +1,16 @@
 """CI bench regression guard: compare a fresh smoke `bench.json` against
 the committed `benchmarks/baseline.json`.
 
-Rows from the guarded modules (netlist_bench, campaign_mc, serve_bench)
-are compared by name on their throughput signals:
+Rows from the guarded modules (netlist_bench, campaign_mc, serve_bench,
+obs_overhead) are compared by name on their throughput signals:
 
 * ratio signals from `derived` (``speedup_vs_scan=`` for the netlist
   engines, ``speedup_vs_loop=`` / ``tmr_amortization=`` for the serving
-  engine) are machine-INDEPENDENT and compared directly — they catch
+  engine, ``telemetry_efficiency=`` for the observability overhead) are
+  machine-INDEPENDENT and compared directly — they catch
   engine-relative regressions regardless of how fast the CI runner is;
 * absolute signals (``gate_evals_per_s=`` / ``tok_s=`` rates,
+  ``ttft_p50/p99=`` / ``tpot_p50/p99=`` latency tails,
   ``us_per_call`` timings >= 10µs, ``*.total_wall_s`` seconds) are first
   normalized by the *median* worse-than-baseline factor across all
   absolute rows — the machine-speed factor between the baseline box and
@@ -34,11 +36,19 @@ import re
 import sys
 from typing import Dict, Tuple
 
-GUARDED_MODULES = ("netlist_bench", "campaign_mc", "serve_bench")
+GUARDED_MODULES = ("netlist_bench", "campaign_mc", "serve_bench",
+                   "obs_overhead")
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
 _RATE_RE = re.compile(r"(gate_evals_per_s|tok_s)=([0-9.eE+-]+)")
 _RATIO_RE = re.compile(
-    r"(speedup_vs_scan|speedup_vs_loop|tmr_amortization)=([0-9.eE+-]+)x")
+    r"(speedup_vs_scan|speedup_vs_loop|tmr_amortization"
+    r"|telemetry_efficiency)=([0-9.eE+-]+)x")
+# latency-tail metrics from serve_bench's chunked rows: lower-better
+# times, machine-normalized like any other absolute timing.  Guarding
+# p99 alongside p50 catches tail-only regressions (a fatter distribution
+# with an unchanged median).
+_LAT_RE = re.compile(
+    r"(ttft_p50|ttft_p99|tpot_p50|tpot_p99)=([0-9.eE+-]+)us")
 MIN_US = 10.0   # ignore sub-10µs timings: pure dispatch noise
 
 
@@ -55,6 +65,9 @@ def extract_metrics(rows) -> Dict[str, Tuple[str, float]]:
         derived = r.get("derived", "")
         for label, val in _RATIO_RE.findall(derived):
             out[f"{name}:{label}"] = ("ratio", float(val))
+        for label, val in _LAT_RE.findall(derived):
+            if float(val) >= MIN_US:
+                out[f"{name}:{label}"] = ("time", float(val))
         rate = _RATE_RE.search(derived)
         if rate:
             out[f"{name}:{rate.group(1)}"] = ("rate", float(rate.group(2)))

@@ -1,0 +1,96 @@
+"""Observability overhead: generation with telemetry/tracing ON vs OFF
+(DESIGN.md §15).
+
+The subsystem's contract is that observing a run must not slow it down:
+metric counters ride inside the compiled launches (no extra device->host
+syncs — tests/test_obs.py proves the count), spans and latency marks are
+a few host-side ``perf_counter`` calls per *chunk* launch, not per token.
+This bench measures the end-to-end cost of that contract on the
+chunk-compiled engine:
+
+* ``t_off`` — ``generate_chunked`` with the NULL_TRACER (spans compile to
+  no-ops, only the timeline's per-chunk marks remain);
+* ``t_on``  — the same call under an enabled ``Tracer`` that records a
+  span per launch plus a metrics record per run.
+
+``telemetry_efficiency = t_off / t_on`` is a machine-independent
+higher-better ratio guarded by check_regression (~1.0 expected; the
+acceptance bar is <= 5% overhead, i.e. >= 0.95).  Both sides are
+min-over-repeats on the same engine/store so contention noise cancels.
+
+Run: PYTHONPATH=src python -m benchmarks.run --only obs_overhead --smoke
+"""
+from __future__ import annotations
+
+import os
+import time
+
+try:
+    from . import _path  # noqa: F401
+except ImportError:
+    import _path  # noqa: F401
+
+import jax
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def _bench_pair(fn_a, fn_b, repeats: int):
+    """(min_a, min_b) seconds per call, measured INTERLEAVED: a, b, a, b…
+    after one warmup each.  The two sides of the efficiency ratio see the
+    same machine-load drift, so it cancels from their minima — two
+    back-to-back independent mins would fold the drift into the ratio."""
+    jax.block_until_ready(fn_a())
+    jax.block_until_ready(fn_b())
+    best_a = best_b = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b
+
+
+def run():
+    from repro.configs import get_config
+    from repro.launch.engine import GenerationEngine
+    from repro.models import params as P
+    from repro.models import transformer as T
+    from repro.obs import NULL_TRACER, Tracer
+    from repro.reliability import parse_scheme
+
+    key = jax.random.PRNGKey(0)
+    repeats = 9 if SMOKE else 11
+    cfg = get_config("phi3-mini-3.8b").smoke()
+    params = P.materialize(key, T.model_specs(cfg))
+    B, PROMPT, GEN, CHUNK = (2, 16, 16, 4) if SMOKE else (4, 32, 48, 8)
+    batch = {"tokens": jax.random.randint(key, (B, PROMPT), 0, cfg.vocab)}
+    n_tok = B * GEN
+
+    rows = []
+    for spec in ("off", "ecc+tmr-parallel"):
+        eng = GenerationEngine(cfg, parse_scheme(spec), gen=GEN,
+                               execution="scan")
+        store, _ = eng.prepare(params, key=key)
+        # a fresh enabled tracer per call: the recording path, including
+        # the event-list appends, is what we are pricing
+        t_off, t_on = _bench_pair(
+            lambda: eng.generate_chunked(store, batch, chunk=CHUNK,
+                                         tracer=NULL_TRACER)[0],
+            lambda: eng.generate_chunked(store, batch, chunk=CHUNK,
+                                         tracer=Tracer(enabled=True))[0],
+            repeats)
+        name = spec.replace("ecc+tmr-parallel", "compose").replace("-", "_")
+        rows.append((
+            f"obs.overhead_{name}_b{B}_g{GEN}", t_on / n_tok * 1e6,
+            f"tok_s={n_tok / t_on:.5g} "
+            f"telemetry_efficiency={t_off / t_on:.3f}x "
+            f"overhead_pct={(t_on / t_off - 1.0) * 100:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived}")

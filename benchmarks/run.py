@@ -25,7 +25,34 @@ except ImportError:       # direct script execution
 
 MODULES = ["fig4_mult", "fig4_nn", "fig5_weights", "ecc_overhead",
            "tmr_tradeoff", "kernels_bench", "campaign_mc", "netlist_bench",
-           "serve_bench"]
+           "serve_bench", "obs_overhead"]
+
+
+def provenance() -> dict:
+    """Run provenance stamped onto every JSON row: a bench number without
+    its git SHA, backend resolution and device shape is unreproducible.
+    `backend` records the *resolved* implementation per op (the REPRO_IMPL
+    env var / registered defaults actually in effect), so a row measured
+    against jnp fallbacks can never masquerade as a kernel number."""
+    import subprocess
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__))).stdout.strip() \
+            or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    import jax
+    from repro.reliability import backend
+    return {
+        "git_sha": sha,
+        "backend": {op: backend.resolve(op) for op in backend.ops()},
+        "platform": jax.default_backend(),
+        # forced-host device count IS the bench mesh capacity: sharded
+        # serve rows appear exactly when this is >= 4 (DESIGN.md §14)
+        "devices": jax.device_count(),
+    }
 
 
 def main() -> None:
@@ -42,6 +69,7 @@ def main() -> None:
     if args.smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
+    stamp = provenance()
     print("name,value,derived")
     rows = []
     failures = 0
@@ -53,13 +81,13 @@ def main() -> None:
                 print(f"{row_name},{us:.3f},{derived}", flush=True)
                 rows.append({"module": name, "name": row_name,
                              "us_per_call": round(us, 3),
-                             "derived": str(derived)})
+                             "derived": str(derived), **stamp})
         except Exception:
             failures += 1
             err = traceback.format_exc(limit=2)
             print(f"{name}.ERROR,0,{err!r}", flush=True)
             rows.append({"module": name, "name": f"{name}.ERROR",
-                         "us_per_call": 0.0, "derived": err})
+                         "us_per_call": 0.0, "derived": err, **stamp})
         # wall-clock totals are a different unit from the per-call rows:
         # record them as kind=time seconds, never as a microsecond
         # us_per_call (the old mislabeling check_regression had to absorb)
@@ -67,12 +95,12 @@ def main() -> None:
         print(f"{name}.total_wall_s,{wall_s:.3f},unit=s", flush=True)
         rows.append({"module": name, "name": f"{name}.total_wall_s",
                      "kind": "time", "seconds": round(wall_s, 3),
-                     "derived": "unit=s"})
+                     "derived": "unit=s", **stamp})
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"modules": mods, "smoke": bool(args.smoke),
                        "failures": failures, "unix_time": int(time.time()),
-                       "rows": rows}, f, indent=1)
+                       "provenance": stamp, "rows": rows}, f, indent=1)
         print(f"# wrote {len(rows)} rows to {args.json}", file=sys.stderr)
     sys.exit(1 if failures else 0)
 

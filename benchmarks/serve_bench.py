@@ -191,6 +191,37 @@ def run():
     rows.append((f"serve.ttft_{tag}_tmr_parallel_b{B}",
                  _bench(lambda: tmr_eng.ttft(store, batch), repeats) * 1e6,
                  "-"))
+
+    # -- latency tails: chunk-compiled generation (DESIGN.md §15) ----------
+    # Per-chunk host timestamps from LatencyTimeline give real TTFT/TPOT
+    # distributions (the serving SLO quantities) rather than a single
+    # whole-run mean.  The row value is the TPOT p50 in µs so the
+    # machine-factor normalization treats it like any other timing; the
+    # p99s ride along in `derived` as guarded time metrics — a scheduling
+    # or voting change that fattens only the tail moves p99 while leaving
+    # tok_s means untouched.
+    from repro.obs import Histogram
+    CHUNK = 4
+    for spec in ("off", "tmr-parallel"):
+        eng = _engines(cfg, spec, GEN)
+        store, _ = eng.prepare(params, key=key)
+        # warmup compiles the prefill + chunk launches
+        jax.block_until_ready(
+            eng.generate_chunked(store, batch, chunk=CHUNK)[0])
+        ttft_h, tpot_h = Histogram(), Histogram()
+        for _ in range(repeats):
+            _, _, tl = eng.generate_chunked(store, batch, chunk=CHUNK)
+            ttft_h.record(tl.ttft_s)
+            tpot_h.extend(tl.tpot_samples())
+        name = spec.replace("-", "_")
+        rows.append((
+            f"serve.lat_{tag}_{name}_b{B}_g{GEN}",
+            tpot_h.percentile(50) * 1e6,
+            f"ttft_p50={ttft_h.percentile(50) * 1e6:.5g}us "
+            f"ttft_p99={ttft_h.percentile(99) * 1e6:.5g}us "
+            f"tpot_p50={tpot_h.percentile(50) * 1e6:.5g}us "
+            f"tpot_p99={tpot_h.percentile(99) * 1e6:.5g}us "
+            f"chunk={CHUNK}"))
     return rows
 
 

@@ -192,6 +192,30 @@ class ScrubTrajectory:
         flips = sum(self.corrected) + 2 * sum(self.uncorrectable)
         return flips / bits_scanned
 
+    def rate_per_scrub(self) -> float:
+        """Observed correction *events* per scrub interval: corrected words
+        plus double-weighted uncorrectable blocks (the flips-observed
+        accounting shared with `observed_flip_rate` and the runtime's
+        `obs.DriftDetector`)."""
+        if not self.n_scrubs:
+            return 0.0
+        return (sum(self.corrected)
+                + 2 * sum(self.uncorrectable)) / self.n_scrubs
+
+    def drift_ratio(self, p_bit: float) -> float:
+        """Observed-over-expected event rate for a known injection rate
+        (1.0 = on-model).  Infinity when corrections appear with no model
+        prior; 1.0 when both sides are silent."""
+        observed = self.rate_per_scrub()
+        if p_bit <= 0 or not self.n_blocks:
+            return float("inf") if observed > 0 else 1.0
+        exp = expected_scrub_rates(p_bit, self.n_blocks)
+        expected = (exp["corrected_per_scrub"]
+                    + 2 * exp["uncorrectable_per_scrub"])
+        if expected == 0:
+            return float("inf") if observed > 0 else 1.0
+        return observed / expected
+
     def summary(self, p_bit: float = 0.0) -> Dict[str, float]:
         out: Dict[str, float] = dict(self.totals())
         out["n_scrubs"] = self.n_scrubs
@@ -200,4 +224,5 @@ class ScrubTrajectory:
             exp = expected_scrub_rates(p_bit, self.n_blocks)
             out["expected_corrected_per_scrub"] = exp["corrected_per_scrub"]
             out["expected_uncorrectable_per_scrub"] = exp["uncorrectable_per_scrub"]
+            out["drift_ratio"] = self.drift_ratio(p_bit)
         return out

@@ -53,6 +53,9 @@ from ..models.config import ModelConfig
 from ..models.params import partition_specs
 from ..models.steps import make_decode_step, make_prefill_step
 from ..models.transformer import model_specs
+from ..obs import LatencyTimeline, NULL_TRACER, Tracer
+from ..obs import fetch_telemetry  # noqa: F401  (re-export: the PR-5 name;
+#                                   now schema-validated by obs.registry)
 from ..optim.sharding_rules import copy_stack_pspec
 from ..pshard import DEFAULT_RULES, ShardingRules, use_mesh_and_rules
 from ..reliability.scheme import (Compose, DiagParityEcc, Scheme, Tmr,
@@ -77,10 +80,13 @@ def _disagreements(t3: jax.Array) -> jax.Array:
     return d.sum(dtype=jnp.int32)
 
 
-def fetch_telemetry(telemetry: Dict[str, jax.Array]) -> Dict[str, Any]:
-    """The single device->host transfer: fetch every on-device counter at
-    once (after timing stops) and return plain numpy values."""
-    return dict(zip(telemetry, jax.device_get(list(telemetry.values()))))
+def _with_emitted(tokens: jax.Array,
+                  telem: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Add the `tokens_emitted` counter (static shape — a host int wrapped
+    as a device scalar, no device->host transfer)."""
+    out = dict(telem)
+    out["tokens_emitted"] = jnp.asarray(tokens.size, jnp.int32)
+    return out
 
 
 class GenerationEngine:
@@ -147,6 +153,7 @@ class GenerationEngine:
         self.mesh = mesh
         self.rules = rules if rules is not None else DEFAULT_RULES
         self._built: Dict[int, Any] = {}   # prompt_len -> compiled fns
+        self._chunk_built: Dict[int, Any] = {}  # chunk steps -> compiled fns
 
     # -- scheme plumbing ----------------------------------------------------
 
@@ -255,6 +262,7 @@ class GenerationEngine:
                                           mesh=mesh)
                 return place(fixed.payload,
                              {"ecc_corrected": rep.corrected,
+                              "ecc_parity_fixed": rep.parity_fixed,
                               "ecc_uncorrectable": rep.uncorrectable})
             if isinstance(scheme, Tmr):
                 return place(_stack_copies([corrupt(i) for i in range(3)]),
@@ -269,6 +277,7 @@ class GenerationEngine:
                 copies = [arena.unpack(b, spec) for b in bufs]
                 return place(_stack_copies(copies),
                              {"ecc_corrected": counts[0],
+                              "ecc_parity_fixed": counts[1],
                               "ecc_uncorrectable": counts[2]})
         raise ValueError(f"unhandled scheme {scheme!r}")
 
@@ -365,6 +374,73 @@ class GenerationEngine:
         self._built[prompt_len] = fns
         return fns
 
+    def _build_chunk(self, n: int):
+        """Compiled decode-chunk programs: `n` scan steps from a (token,
+        cache) carry.  Independent of prompt length (the cache shapes are
+        traced), so keyed by chunk size only.  The TMR chunk takes the
+        global step `offset` as a *traced* scalar, so the in-scan vote
+        schedule `(step + 1) % vote_every == 0` lines up with the
+        unchunked scan bit for bit at any chunk size — no recompile per
+        chunk position."""
+        if n in self._chunk_built:
+            return self._chunk_built[n]
+        decode = make_decode_step(self.cfg)
+        tmr = self._tmr()
+        vote = tmr._vote() if tmr is not None else None
+        vote_every, vote_cache = self.vote_every, self.vote_cache
+
+        def chunk_scan(params, tok, cache):
+            def body(carry, _):
+                tok, cache = carry
+                ntok, _, cache = decode(params, tok, cache)
+                return (ntok, cache), ntok
+
+            (tok, cache), toks = jax.lax.scan(body, (tok, cache), None,
+                                              length=n)
+            # toks (n, B, 1) -> (B, n)
+            return tok, cache, toks[:, :, 0].T
+
+        def tmr_chunk(stacked, tok3, cache3, offset):
+            # identical body to _build's tmr_scan, stepped from `offset`
+            def body(carry, step):
+                tok3, cache3 = carry
+                ntok3, _, cache3 = jax.vmap(decode)(stacked, tok3, cache3)
+                dis = _disagreements(ntok3)
+                if vote_every:
+                    do = (step + 1) % vote_every == 0
+                    voted = vote(ntok3[0], ntok3[1], ntok3[2])
+                    ntok3 = jnp.where(do, voted[None], ntok3)
+                    if vote_cache:
+                        cache3 = jax.lax.cond(
+                            do,
+                            lambda c: jax.tree.map(
+                                lambda x: jnp.broadcast_to(
+                                    vote(x[0], x[1], x[2])[None],
+                                    x.shape).astype(x.dtype), c),
+                            lambda c: c, cache3)
+                return (ntok3, cache3), (ntok3, dis)
+
+            (tok3, cache3), (steps3, dis) = jax.lax.scan(
+                body, (tok3, cache3), offset + jnp.arange(n))
+            return tok3, cache3, steps3, dis
+
+        donate = (2,) if jax.default_backend() != "cpu" else ()
+        concurrent = tmr is not None and tmr.discipline != "serial"
+        fns = {
+            "chunk": jax.jit(chunk_scan, donate_argnums=donate),
+            "tmr_chunk": (jax.jit(tmr_chunk, donate_argnums=donate)
+                          if concurrent else None),
+        }
+        self._chunk_built[n] = fns
+        return fns
+
+    def _chunk_sizes(self, chunk: int):
+        rem = self.gen - 1
+        while rem > 0:
+            n = min(chunk, rem)
+            yield n
+            rem -= n
+
     # -- public entry points ------------------------------------------------
 
     def generate(self, store: Any, batch: Dict[str, jax.Array]
@@ -387,14 +463,143 @@ class GenerationEngine:
             batch = self._shard_batch(batch)
             fns = self._build(batch["tokens"].shape[1])
             if not self.copy_axis:
-                return fns["single_scan"](store, batch)
-            if self._discipline() == "serial":
+                tokens, telem = fns["single_scan"](store, batch)
+            elif self._discipline() == "serial":
                 outs = [fns["single_scan"](_copy(store, i), batch)[0]
                         for i in range(3)]
-                voted = self._tmr()._vote()(*outs)
-                return voted, {"tmr_final_disagreements":
-                               _disagreements(jnp.stack(outs))}
-            return fns["tmr_scan"](store, batch)
+                tokens = self._tmr()._vote()(*outs)
+                telem = {"tmr_final_disagreements":
+                         _disagreements(jnp.stack(outs))}
+            else:
+                tokens, telem = fns["tmr_scan"](store, batch)
+            return tokens, _with_emitted(tokens, telem)
+
+    def generate_chunked(self, store, batch, *, chunk: int,
+                         timeline: Optional[LatencyTimeline] = None,
+                         tracer: Tracer = NULL_TRACER
+                         ) -> Tuple[jax.Array, Dict[str, jax.Array],
+                                    LatencyTimeline]:
+        """Latency-observable generation: the scan split into compiled
+        chunk launches, a `LatencyTimeline` mark after each one lands.
+
+        Bit-exact against `generate_scan` under every scheme and
+        `vote_every` (the chunk programs thread the global step offset, so
+        the in-scan vote schedule is unchanged).  Each mark is a
+        `jax.block_until_ready` + `perf_counter` read — a sync point, NOT
+        a device->host data transfer; telemetry stays on device and
+        `fetch_telemetry` remains the single host sync.
+
+        The first mark is TTFT (prefill -> first token); subsequent marks
+        time each `chunk`-token launch, feeding `timeline.tpot_samples()`.
+        The serial discipline runs copies 0 and 1 to completion first
+        (preserving the 1x in-flight property), so its marks — and its
+        honest TTFT — start at the third copy's prefill, when voted
+        tokens first exist.
+
+        Returns (tokens, telemetry, timeline).
+        """
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        if self.execution == "loop":
+            raise ValueError("chunked generation requires execution='scan' "
+                             "(the loop reference is already per-token)")
+        timeline = timeline if timeline is not None else LatencyTimeline()
+        with use_mesh_and_rules(self.exec_mesh, self.rules):
+            batch = self._shard_batch(batch)
+            fns = self._build(batch["tokens"].shape[1])
+            timeline.begin()
+            if not self.copy_axis:
+                with tracer.trace("prefill", tokens=1):
+                    tok, _, cache = fns["prefill"](store, batch)
+                    jax.block_until_ready(tok)
+                timeline.mark(1)
+                parts = [tok]
+                for n in self._chunk_sizes(chunk):
+                    with tracer.trace("decode_chunk", tokens=n):
+                        tok, cache, toks = self._build_chunk(n)["chunk"](
+                            store, tok, cache)
+                        jax.block_until_ready(toks)
+                    timeline.mark(n)
+                    parts.append(toks)
+                tokens = jnp.concatenate(parts, axis=1)
+                telem: Dict[str, jax.Array] = {}
+            elif self._discipline() == "serial":
+                tokens, telem = self._chunked_serial(
+                    store, batch, fns, chunk, timeline, tracer)
+            else:
+                tokens, telem = self._chunked_concurrent(
+                    store, batch, fns, chunk, timeline, tracer)
+            return tokens, _with_emitted(tokens, telem), timeline
+
+    def _chunked_concurrent(self, store, batch, fns, chunk, timeline,
+                            tracer):
+        """Chunked 'parallel'/'semi' TMR: vmapped prefill + chunked vmapped
+        scans; per-step disagreements and vote points identical to the
+        unchunked tmr_scan (global-step offset threading)."""
+        vote = self._tmr()._vote()
+        with tracer.trace("tmr_prefill", tokens=1):
+            tok3, _, cache3 = fns["tmr_prefill"](store, batch)
+            jax.block_until_ready(tok3)
+        timeline.mark(1)
+        seq_parts = [tok3[None]]                       # (1, 3, B, 1)
+        dis_parts = [_disagreements(tok3)[None]]
+        off = 0
+        for n in self._chunk_sizes(chunk):
+            with tracer.trace("tmr_decode_chunk", tokens=n, offset=off):
+                tok3, cache3, steps3, dis = \
+                    self._build_chunk(n)["tmr_chunk"](
+                        store, tok3, cache3, jnp.int32(off))
+                jax.block_until_ready(steps3)
+            timeline.mark(n)
+            seq_parts.append(steps3)
+            dis_parts.append(dis)
+            off += n
+        # (gen, 3, B, 1) -> per-copy (3, B, gen), as in tmr_scan
+        seq3 = jnp.concatenate(seq_parts, axis=0)
+        seq3 = jnp.moveaxis(seq3[..., 0], 0, -1)
+        tokens = vote(seq3[0], seq3[1], seq3[2])
+        return tokens, {
+            "tmr_step_disagreements": jnp.concatenate(dis_parts),
+            "tmr_final_disagreements": _disagreements(seq3)}
+
+    def _chunked_serial(self, store, batch, fns, chunk, timeline, tracer):
+        """Chunked serial TMR: copies 0/1 run to completion (sequentially,
+        no marks — only their token sequences are kept), then copy 2's
+        launches each complete a *voted* chunk (majority vote is
+        elementwise, so chunk-wise voting equals the final-sequence
+        vote)."""
+        vote = self._tmr()._vote()
+        per_copy = []                      # copies 0, 1: [tok0, chunk, ...]
+        for i in range(2):
+            params = _copy(store, i)
+            with tracer.trace(f"serial_copy{i}", copy=i):
+                tok, _, cache = fns["prefill"](params, batch)
+                parts = [tok]
+                for n in self._chunk_sizes(chunk):
+                    tok, cache, toks = self._build_chunk(n)["chunk"](
+                        params, tok, cache)
+                    parts.append(toks)
+            per_copy.append(parts)
+        params = _copy(store, 2)
+        with tracer.trace("serial_copy2_prefill", tokens=1):
+            tok, _, cache = fns["prefill"](params, batch)
+            voted = vote(per_copy[0][0], per_copy[1][0], tok)
+            jax.block_until_ready(voted)
+        timeline.mark(1)
+        parts2, voted_parts = [tok], [voted]
+        for idx, n in enumerate(self._chunk_sizes(chunk), start=1):
+            with tracer.trace("serial_decode_chunk", tokens=n, copy=2):
+                tok, cache, toks = self._build_chunk(n)["chunk"](
+                    params, tok, cache)
+                v = vote(per_copy[0][idx], per_copy[1][idx], toks)
+                jax.block_until_ready(v)
+            timeline.mark(n)
+            parts2.append(toks)
+            voted_parts.append(v)
+        tokens = jnp.concatenate(voted_parts, axis=1)
+        seq3 = jnp.stack([jnp.concatenate(p, axis=1)
+                          for p in (per_copy[0], per_copy[1], parts2)])
+        return tokens, {"tmr_final_disagreements": _disagreements(seq3)}
 
     def generate_loop(self, store, batch):
         """Interpreted reference: jitted prefill + per-token decode
@@ -413,11 +618,13 @@ class GenerationEngine:
                 return jnp.concatenate(toks, axis=1)
 
             if not self.copy_axis:
-                return one(store), {}
+                tokens = one(store)
+                return tokens, _with_emitted(tokens, {})
             outs = [one(_copy(store, i)) for i in range(3)]
             seq3 = jnp.stack(outs)
             voted = self._tmr()._vote()(*outs)
-            return voted, {"tmr_final_disagreements": _disagreements(seq3)}
+            return voted, _with_emitted(
+                voted, {"tmr_final_disagreements": _disagreements(seq3)})
 
     def ttft(self, store, batch) -> jax.Array:
         """First generated token(s) only — the prefill launch.  Time this

@@ -26,6 +26,13 @@ tmr-serial | tmr-parallel | tmr-semi | ecc+tmr[-<discipline>]``
 
 All scrub/vote counters stay on device during the timed region and are
 fetched once after timing stops (no host syncs in the hot path).
+
+Observability (DESIGN.md §15): ``--trace out.json`` records launch spans
+as Chrome-trace JSON (load in Perfetto / chrome://tracing), ``--metrics
+out.jsonl`` appends structured telemetry records, and ``--chunk N`` runs
+chunk-compiled generation with per-chunk latency marks, reporting
+TTFT/TPOT p50/p95/p99 tails — all without adding a single device->host
+sync to the timed region.
 """
 from __future__ import annotations
 
@@ -40,6 +47,7 @@ from ..faults import (FaultModel, RetentionDrift, StuckAtFaults,
                       TransientBitFlips)
 from ..models import params as P
 from ..models import transformer as T
+from ..obs import LatencyTimeline, Tracer
 from ..reliability import Compose, DiagParityEcc, Tmr, Unprotected, \
     parse_scheme
 from .engine import GenerationEngine, fetch_telemetry
@@ -78,6 +86,16 @@ def main() -> None:
                     help="fault model driving the per-copy corruption "
                          "(repro.faults taxonomy; rate = --inject-p-bit)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write launch spans as Chrome-trace JSON "
+                         "(Perfetto / chrome://tracing loadable)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="append structured telemetry records as JSONL")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="generate in compiled N-token chunk launches with "
+                         "per-chunk latency marks: reports TTFT/TPOT "
+                         "p50/p95/p99 tails (0 = one scan launch, no "
+                         "tails; bit-exact either way)")
     args = ap.parse_args()
 
     if args.tmr is not None:
@@ -102,6 +120,11 @@ def main() -> None:
     if args.vote_cache and not args.vote_every:
         ap.error("--vote-cache needs --vote-every K (cache votes happen at "
                  "the in-scan vote points)")
+    if args.chunk and args.engine == "loop":
+        ap.error("--chunk requires the scan engine (the loop reference is "
+                 "already per-token)")
+    if args.chunk < 0:
+        ap.error(f"--chunk must be >= 0, got {args.chunk}")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -134,24 +157,39 @@ def main() -> None:
                      f"{args.mesh!r}")
         mesh = make_test_mesh(data, model)
 
+    tracer = Tracer(enabled=bool(args.trace or args.metrics))
     engine = GenerationEngine(cfg, scheme, gen=args.gen,
                               vote_every=args.vote_every,
                               vote_cache=args.vote_cache,
                               execution=args.engine, mesh=mesh)
-    store, prep = engine.prepare(
-        params, key=key, fault=fault if args.inject_p_bit else None)
+    with tracer.trace("prepare", scheme=scheme.name):
+        store, prep = engine.prepare(
+            params, key=key, fault=fault if args.inject_p_bit else None)
     # keep compile and prepare's async corrupt/scrub launches out of the
     # timed region: one untimed warmup generation, then drain the store
-    jax.block_until_ready(engine.generate(store, batch)[0])
-    store = jax.block_until_ready(store)
+    with tracer.trace("warmup"):
+        if args.chunk:
+            jax.block_until_ready(
+                engine.generate_chunked(store, batch, chunk=args.chunk)[0])
+        else:
+            jax.block_until_ready(engine.generate(store, batch)[0])
+        store = jax.block_until_ready(store)
 
     # timed region: no host syncs — telemetry stays on device until after
+    timeline = None
     t0 = time.time()
-    out, telem = engine.generate(store, batch)
-    out = jax.block_until_ready(out)
+    with tracer.trace("generate", scheme=scheme.name, gen=args.gen,
+                      chunk=args.chunk):
+        if args.chunk:
+            out, telem, timeline = engine.generate_chunked(
+                store, batch, chunk=args.chunk, tracer=tracer)
+        else:
+            out, telem = engine.generate(store, batch)
+        out = jax.block_until_ready(out)
     dt = time.time() - t0
 
-    stats = fetch_telemetry({**prep, **telem})   # the single fetch
+    with tracer.trace("fetch_telemetry"):
+        stats = fetch_telemetry({**prep, **telem})   # the single fetch
     # off/ecc stores are plain params pytrees, so the timed engine's
     # compiled single-copy program serves the clean reference without a
     # recompile; copy-axis schemes need a fresh single-copy engine
@@ -181,6 +219,33 @@ def main() -> None:
         print(f"[serve] reliability (fetched after timing): "
               f"{'; '.join(parts)}")
     print(f"[serve] cost model ({scheme.name}): {scheme.overhead().describe()}")
+    if timeline is not None:
+        lat = timeline.summary()
+        print(f"[serve] latency tails (chunk={args.chunk}): "
+              f"ttft={lat['ttft_s'] * 1e3:.1f}ms "
+              f"tpot p50={lat.get('tpot_p50', float('nan')) * 1e3:.2f}ms "
+              f"p95={lat.get('tpot_p95', float('nan')) * 1e3:.2f}ms "
+              f"p99={lat.get('tpot_p99', float('nan')) * 1e3:.2f}ms")
+    if args.trace or args.metrics:
+        record = {"kind": "serve", "arch": cfg.name, "scheme": scheme.name,
+                  "engine": args.engine, "mesh": mesh_desc,
+                  "p_bit": args.inject_p_bit, "batch": args.batch,
+                  "gen": args.gen, "chunk": args.chunk, "tok_s": tok_s,
+                  "agreement": agree,
+                  **{k: (np.asarray(v).sum().item()
+                         if hasattr(v, "shape") else v)
+                     for k, v in stats.items()}}
+        if timeline is not None:
+            record.update({k: float(v)
+                           for k, v in timeline.summary().items()})
+        tracer.metrics(record, kind="serve")
+        if args.trace:
+            tracer.write_chrome(args.trace)
+            print(f"[serve] chrome trace -> {args.trace} "
+                  f"(load in Perfetto / chrome://tracing)")
+        if args.metrics:
+            tracer.write_jsonl(args.metrics)
+            print(f"[serve] metrics jsonl -> {args.metrics}")
     print("[serve] sample:", np.asarray(out[0, :16]).tolist())
 
 

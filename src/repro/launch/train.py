@@ -24,13 +24,14 @@ from ..data.synthetic import SyntheticLM
 from ..models import params as P
 from ..models import transformer as T
 from ..models.steps import init_train_state, make_train_step
+from ..obs import NULL_TRACER, Tracer
 from ..optim import AdamWConfig
 from ..pshard import DEFAULT_RULES, use_mesh_and_rules
 from ..reliability import SCHEME_CHOICES, Unprotected, parse_scheme
 from ..runtime import LoopConfig, TrainLoop
 
 
-def build(args):
+def build(args, tracer: Tracer = NULL_TRACER):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
@@ -70,7 +71,8 @@ def build(args):
                           log_every=args.log_every,
                           inject_p_bit=args.inject_p_bit,
                           scheme=parse_scheme(args.scheme))
-    loop = TrainLoop(train_step, state, batch_at, loop_cfg, ckpt=ckpt)
+    loop = TrainLoop(train_step, state, batch_at, loop_cfg, ckpt=ckpt,
+                     tracer=tracer)
     if args.ecc_scrub_every and not isinstance(loop_cfg.scheme, Unprotected):
         loop.attach_scheme()
     return cfg, loop, n_params
@@ -101,9 +103,15 @@ def main() -> None:
     ap.add_argument("--inject-p-bit", type=float, default=0.0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write loop spans (train_step/scrub/checkpoint/"
+                         "eval) as Chrome-trace JSON (DESIGN.md §15)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="append heartbeat/scrub records as JSONL")
     args = ap.parse_args()
 
-    cfg, loop, n_params = build(args)
+    tracer = Tracer(enabled=bool(args.trace or args.metrics))
+    cfg, loop, n_params = build(args, tracer=tracer)
     print(f"[train] {cfg.name} ({cfg.family}) params={n_params/1e6:.1f}M "
           f"steps={args.steps} batch={args.batch}x{args.seq}")
     if args.resume:
@@ -116,6 +124,16 @@ def main() -> None:
     if loop.scrub_reports:
         tot = sum(int(r.corrected) for _, r in loop.scrub_reports)
         print(f"[reliability] scrubs={len(loop.scrub_reports)} corrected_bits={tot}")
+    if args.trace:
+        tracer.write_chrome(args.trace)
+        print(f"[train] chrome trace -> {args.trace} "
+              f"(load in Perfetto / chrome://tracing)")
+    if args.metrics:
+        tracer.metrics({"final_step": summary["final_step"],
+                        "tok_s": tok_s, **summary["monitor"]},
+                       kind="train_summary")
+        tracer.write_jsonl(args.metrics)
+        print(f"[train] metrics jsonl -> {args.metrics}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,31 @@
+"""On-device telemetry subsystem (DESIGN.md §15).
+
+One observability layer threaded through kernels, schemes, the generation
+engine and the runtime:
+
+* `MetricsRegistry` / `SCHEMA` — named, schema-validated on-device
+  counters; `fetch_telemetry` is the single device->host sync.
+* `Tracer` — span-based launch tracing: Chrome-trace (Perfetto) JSON plus
+  a JSONL metrics log, zero device syncs.
+* `LatencyTimeline` / `Histogram` — TTFT/TPOT latency tails from
+  per-chunk host timestamps.
+* `DriftDetector` — observed correction rates vs the closed-form model,
+  the health signal feeding `HeartbeatMonitor`.
+* `count_host_transfers` — the transfer guard that *enforces* the
+  single-sync invariant in tests.
+"""
+from .drift import DriftDetector, DriftStatus
+from .guard import TransferLedger, count_host_transfers
+from .latency import Histogram, LatencyTimeline
+from .registry import (DEFAULT_REGISTRY, SCHEMA, MetricSpec, MetricsRegistry,
+                       ScrubMetrics, fetch_telemetry)
+from .trace import NULL_TRACER, Tracer
+
+__all__ = [
+    "DEFAULT_REGISTRY", "SCHEMA", "MetricSpec", "MetricsRegistry",
+    "ScrubMetrics", "fetch_telemetry",
+    "Tracer", "NULL_TRACER",
+    "Histogram", "LatencyTimeline",
+    "DriftDetector", "DriftStatus",
+    "TransferLedger", "count_host_transfers",
+]

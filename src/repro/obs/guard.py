@@ -1,0 +1,100 @@
+"""The transfer guard: count device->host syncs to *enforce* the
+single-transfer telemetry invariant (DESIGN.md §15).
+
+PR 5 promised that the engine's timed generation region performs no host
+syncs and `fetch_telemetry` exactly one; until now that was a convention.
+`count_host_transfers()` turns it into a testable property: inside the
+context every explicit host-read API is intercepted and tallied —
+
+* ``jax.device_get`` — the telemetry fetch path (one call over N arrays
+  counts as ONE sync: it is a single synchronization point, however many
+  leaves it gathers);
+* ``ArrayImpl.__array__`` / ``.item()`` / ``.tolist()`` — the implicit
+  conversion surfaces (``np.asarray``, ``int()``/``float()`` funnels) the
+  repo's host code uses.
+
+``jax.block_until_ready`` is deliberately NOT counted: it synchronizes
+with the device but moves no data — chunked generation relies on it for
+latency timestamps without breaking the zero-transfer property.
+
+Platform note: `jax.transfer_guard_device_to_host` does not fire on the
+CPU backend (host-resident buffers are zero-copy views), so this ledger
+hooks the Python entry points instead; on accelerator backends the two
+compose (`strict=True` additionally arms jax's own guard, a no-op on
+CPU).  The hook is process-global and not reentrant — test-only.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import traceback
+from typing import Iterator, List
+
+import jax
+
+__all__ = ["TransferLedger", "count_host_transfers"]
+
+
+@dataclasses.dataclass
+class TransferLedger:
+    """Tally of host syncs observed inside a `count_host_transfers` region."""
+
+    syncs: int = 0
+    sites: List[str] = dataclasses.field(default_factory=list)
+
+    def _hit(self, api: str, keep_site: bool = True) -> None:
+        self.syncs += 1
+        if keep_site and len(self.sites) < 32:
+            # the caller two frames up (skip the wrapper) — enough to name
+            # the offender in the assertion message
+            stack = traceback.extract_stack(limit=8)[:-2]
+            frame = next((f for f in reversed(stack)
+                          if "obs/guard" not in f.filename), None)
+            self.sites.append(
+                f"{api} @ {frame.filename}:{frame.lineno}" if frame else api)
+
+
+@contextlib.contextmanager
+def count_host_transfers(strict: bool = True) -> Iterator[TransferLedger]:
+    """Context manager yielding a `TransferLedger`; every explicit host
+    read inside increments it.  See module doc for what counts."""
+    ledger = TransferLedger()
+    arr_t = type(jax.numpy.zeros(()))     # jaxlib ArrayImpl
+    orig_device_get = jax.device_get
+    orig = {name: getattr(arr_t, name)
+            for name in ("__array__", "item", "tolist")}
+    in_device_get = [False]               # leaf reads inside one device_get
+                                          # are part of that single sync
+
+    def device_get(x):
+        if not in_device_get[0]:
+            ledger._hit("jax.device_get")
+        in_device_get[0] = True
+        try:
+            # counted syncs are allowed through jax's own guard (armed on
+            # accelerator backends when strict) — we tally, not forbid
+            with jax.transfer_guard_device_to_host("allow"):
+                return orig_device_get(x)
+        finally:
+            in_device_get[0] = False
+
+    def make_wrapper(name, fn):
+        def wrapper(self, *args, **kw):
+            if not in_device_get[0]:
+                ledger._hit(f"ArrayImpl.{name}")
+            with jax.transfer_guard_device_to_host("allow"):
+                return fn(self, *args, **kw)
+        return wrapper
+
+    jax.device_get = device_get
+    for name, fn in orig.items():
+        setattr(arr_t, name, make_wrapper(name, fn))
+    guard = (jax.transfer_guard_device_to_host("disallow") if strict
+             else contextlib.nullcontext())
+    try:
+        with guard:
+            yield ledger
+    finally:
+        jax.device_get = orig_device_get
+        for name, fn in orig.items():
+            setattr(arr_t, name, fn)

@@ -1,0 +1,198 @@
+"""The metrics registry: one fixed, named schema for every on-device
+reliability counter the system emits (DESIGN.md §15).
+
+The paper's reliability argument is quantitative — correction rates, vote
+outcomes, corruption probabilities over time — so the counters backing it
+cannot stay loose dicts of ad-hoc keys.  `MetricsRegistry` pins the schema:
+every metric has a name, a kind (``counter`` | ``series`` | ``gauge``) and
+a docstring, and `fetch` refuses unknown names, so a telemetry dict that
+reaches the host is guaranteed to be interpretable.
+
+Device-side discipline (the PR-5 invariant, now enforced by the
+transfer-guard test in tests/test_obs.py): metrics *accumulate on device*
+— `zeros()` builds the int32 accumulator dict, `accumulate()` adds counter
+updates / stacks series updates as device ops (jit/vmap/shard_map safe),
+and `fetch()` performs ONE schema-validated `jax.device_get` over the whole
+dict after timing stops.  Nothing in this module syncs implicitly.
+
+`ScrubMetrics` is the *host-side* structured record a fetched scrub
+interval condenses to — the argument `HeartbeatMonitor.record_scrub` takes
+(replacing the bare-int triple) and the sample `obs.drift.DriftDetector`
+consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MetricSpec", "MetricsRegistry", "ScrubMetrics", "SCHEMA",
+           "DEFAULT_REGISTRY", "fetch_telemetry"]
+
+KINDS = ("counter", "series", "gauge")
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One named metric: ``counter`` accumulates by integer addition,
+    ``series`` stacks per-step samples along axis 0, ``gauge`` holds the
+    last written value."""
+
+    name: str
+    kind: str = "counter"
+    doc: str = ""
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"metric kind must be one of {KINDS}, "
+                             f"got {self.kind!r}")
+
+
+#: The fixed schema.  Names match the telemetry keys the engine and the
+#: schemes have emitted since PR 5, so fetched dicts stay grep-compatible.
+SCHEMA: Tuple[MetricSpec, ...] = (
+    MetricSpec("ecc_corrected", "counter",
+               "arena words corrected by the diagonal-parity code"),
+    MetricSpec("ecc_parity_fixed", "counter",
+               "parity-word (check-row) flips repaired during scrub"),
+    MetricSpec("ecc_uncorrectable", "counter",
+               "blocks with >= 2 flips — beyond the single-error code"),
+    MetricSpec("ecc_injected", "counter",
+               "bit flips injected by the fused inject+scrub kernel"),
+    MetricSpec("tmr_step_disagreements", "series",
+               "per-decode-step token positions where the 3 copies differ"),
+    MetricSpec("tmr_final_disagreements", "counter",
+               "token positions voted on in the final sequences"),
+    MetricSpec("faults_injected", "counter",
+               "fault-model corruption events applied to held data copies"),
+    MetricSpec("tokens_emitted", "counter",
+               "tokens produced by the generation engine"),
+)
+
+
+class MetricsRegistry:
+    """Schema-validated registry of on-device metrics (see module doc)."""
+
+    def __init__(self, schema: Iterable[MetricSpec] = SCHEMA):
+        self._by_name: Dict[str, MetricSpec] = {}
+        for spec in schema:
+            if spec.name in self._by_name:
+                raise ValueError(f"duplicate metric name {spec.name!r}")
+            self._by_name[spec.name] = spec
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._by_name)
+
+    def spec(self, name: str) -> MetricSpec:
+        try:
+            return self._by_name[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown metric {name!r}; the schema defines "
+                f"{sorted(self._by_name)} (extend obs.registry.SCHEMA to "
+                f"add metrics — ad-hoc telemetry keys are rejected)"
+            ) from None
+
+    def validate(self, telemetry: Mapping[str, Any]) -> None:
+        for name in telemetry:
+            self.spec(name)
+
+    # -- device-side accumulation (jit/vmap/shard_map safe) ----------------
+
+    def zeros(self, names: Optional[Iterable[str]] = None
+              ) -> Dict[str, jax.Array]:
+        """Fresh accumulator dict: int32 zero scalars for counters/gauges,
+        empty (0,) int32 arrays for series."""
+        out: Dict[str, jax.Array] = {}
+        for name in (names if names is not None else self.names):
+            spec = self.spec(name)
+            out[name] = (jnp.zeros((0,), jnp.int32) if spec.kind == "series"
+                         else jnp.zeros((), jnp.int32))
+        return out
+
+    def accumulate(self, metrics: Mapping[str, jax.Array],
+                   updates: Mapping[str, Any]) -> Dict[str, jax.Array]:
+        """Functionally fold `updates` into `metrics` — counter adds,
+        series concatenation, gauge overwrite — all device ops."""
+        self.validate(updates)
+        out = dict(metrics)
+        for name, val in updates.items():
+            kind = self.spec(name).kind
+            val = jnp.asarray(val)
+            if kind == "series":
+                val = jnp.atleast_1d(val)
+                out[name] = (jnp.concatenate([out[name], val])
+                             if name in out else val)
+            elif kind == "gauge" or name not in out:
+                out[name] = val
+            else:
+                out[name] = out[name] + val
+        return out
+
+    def from_report(self, report: Any,
+                    injected: Optional[jax.Array] = None
+                    ) -> Dict[str, jax.Array]:
+        """Map a `core.reliability.ScrubReport` (device counters) onto the
+        schema names; `injected` adds the inject_scrub kernel's 4th
+        counter when available."""
+        out = {"ecc_corrected": report.corrected,
+               "ecc_parity_fixed": report.parity_fixed,
+               "ecc_uncorrectable": report.uncorrectable}
+        if injected is not None:
+            out["ecc_injected"] = injected
+        return out
+
+    def psum(self, metrics: Mapping[str, jax.Array],
+             axis_name: Any) -> Dict[str, jax.Array]:
+        """Cross-shard reduce inside a `shard_map` body: counters are plain
+        integer sums, so psum'd totals equal the single-device counts bit
+        for bit (DESIGN.md §14)."""
+        return {k: jax.lax.psum(v, axis_name) for k, v in metrics.items()}
+
+    # -- the single host sync ----------------------------------------------
+
+    def fetch(self, telemetry: Mapping[str, jax.Array]) -> Dict[str, Any]:
+        """THE device->host transfer: schema-validate, then fetch every
+        counter in one `jax.device_get` (after timing stops)."""
+        self.validate(telemetry)
+        return dict(zip(telemetry,
+                        jax.device_get(list(telemetry.values()))))
+
+
+DEFAULT_REGISTRY = MetricsRegistry()
+
+
+def fetch_telemetry(telemetry: Mapping[str, jax.Array]) -> Dict[str, Any]:
+    """Schema-validated single-transfer fetch against the default registry
+    (the function `launch.engine` has re-exported since PR 5)."""
+    return DEFAULT_REGISTRY.fetch(telemetry)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScrubMetrics:
+    """Host-side structured record of one scrub interval — what the
+    monitor ingests (replacing `record_scrub`'s bare-int triple) and what
+    the drift detector samples."""
+
+    corrected: int
+    parity_fixed: int = 0
+    uncorrectable: int = 0
+    injected: int = 0
+    vote_disagreements: int = 0
+
+    @classmethod
+    def from_fetched(cls, stats: Mapping[str, Any]) -> "ScrubMetrics":
+        """Build from an already-fetched telemetry dict (schema names)."""
+        def get(name):
+            v = stats.get(name, 0)
+            return int(jnp.asarray(v).sum()) if hasattr(v, "shape") \
+                else int(v)
+        return cls(corrected=get("ecc_corrected"),
+                   parity_fixed=get("ecc_parity_fixed"),
+                   uncorrectable=get("ecc_uncorrectable"),
+                   injected=get("ecc_injected"),
+                   vote_disagreements=get("tmr_final_disagreements")
+                   + get("tmr_step_disagreements"))

@@ -158,6 +158,33 @@ class Scheme:
         (DESIGN.md §14) — bit-exact vs mesh=None."""
         raise NotImplementedError
 
+    def vote_share(self, report: ScrubReport):
+        """The copy-vote share of a scrub report — the scheme knows which
+        of its counters are vote outcomes.  None for non-voting schemes;
+        an on-device int32 otherwise (fetch with the rest)."""
+        return None
+
+    def scrub_into(self, prot: Protected, metrics, mesh=None,
+                   registry=None) -> Tuple[Protected, dict]:
+        """Scrub and fold the report into a metrics-registry accumulator
+        dict (obs.MetricsRegistry schema names, device-side adds):
+
+            metrics = DEFAULT_REGISTRY.zeros(["ecc_corrected", ...])
+            prot, metrics = scheme.scrub_into(prot, metrics)
+            ...
+            stats = fetch_telemetry(metrics)     # ONE host sync at the end
+
+        Counters never touch the host between scrubs — the accumulation is
+        `registry.accumulate`, all jnp adds."""
+        from ..obs import DEFAULT_REGISTRY
+        registry = registry if registry is not None else DEFAULT_REGISTRY
+        fixed, report = self.scrub(prot, mesh=mesh)
+        updates = registry.from_report(report)
+        vd = self.vote_share(report)
+        if vd is not None:
+            updates["tmr_final_disagreements"] = vd
+        return fixed, registry.accumulate(metrics, updates)
+
     def read(self, prot: Protected) -> Any:
         """Decode/vote the protected payload back to a plain pytree."""
         return prot.payload
@@ -348,6 +375,10 @@ class Tmr(Scheme):
                              uncorrectable=conflicts)
         return Protected(voted, (voted, voted), self), report
 
+    def vote_share(self, report: ScrubReport):
+        # every TMR repair and every conflict is a copy disagreement
+        return report.corrected + report.uncorrectable
+
     def _redundancy_shardings(self, payload, pspecs, mesh, rules):
         ns = _ns_tree(pspecs, mesh)
         return (ns, ns)
@@ -466,6 +497,12 @@ class Compose(Scheme):
             parity_fixed=counts[1],
             uncorrectable=conflict.sum(dtype=jnp.int32))
         return out, report
+
+    def vote_share(self, report: ScrubReport):
+        # only the post-ECC three-way conflicts are separable from the
+        # merged report (repaired pairwise disagreements are folded into
+        # `corrected` with the per-copy ECC counts)
+        return report.uncorrectable
 
     def corrupt_store(self, prot: Protected, model, key: jax.Array,
                       dt: float = 1.0) -> Protected:

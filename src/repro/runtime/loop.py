@@ -36,9 +36,10 @@ from ..core import arena
 from ..core.analytics import ScrubTrajectory
 from ..core.reliability import ReliableStore, WordEccConfig
 from ..faults.models import FaultModel, TransientBitFlips
+from ..obs import NULL_TRACER, DriftDetector, ScrubMetrics, Tracer
 from ..reliability import backend
-from ..reliability.scheme import (DiagParityEcc, Protected, Scheme,
-                                  parse_scheme)
+from ..reliability.scheme import (Compose, DiagParityEcc, Protected, Scheme,
+                                  Tmr, parse_scheme)
 from .monitor import Decision, HeartbeatMonitor, StragglerPolicy
 
 __all__ = ["LoopConfig", "TrainLoop"]
@@ -76,7 +77,8 @@ class TrainLoop:
                  monitor: Optional[HeartbeatMonitor] = None,
                  log: Callable[[str], None] = print,
                  inject_fn: Optional[Callable[[Any, int], Any]] = None,
-                 eval_fn: Optional[Callable[[Any, int], Any]] = None):
+                 eval_fn: Optional[Callable[[Any, int], Any]] = None,
+                 tracer: Tracer = NULL_TRACER):
         self.train_step = train_step
         self.state = state
         self.batch_at = batch_at
@@ -91,6 +93,8 @@ class TrainLoop:
         self.eval_fn = eval_fn        # e.g. launch.engine.make_eval_hook —
                                       # compiled sample generation every
                                       # cfg.eval_every steps
+        self.tracer = tracer          # obs.Tracer: launch spans + heartbeat
+                                      # events (NULL_TRACER = zero overhead)
         self.metrics_history: list = []
         self.eval_history: list = []
         self.scrub_reports: list = []
@@ -140,10 +144,25 @@ class TrainLoop:
         return DiagParityEcc()
 
     def attach_scheme(self, scheme: Optional[Scheme] = None) -> None:
-        """Arm the protection scheme over the current parameter store."""
+        """Arm the protection scheme over the current parameter store.
+
+        When the loop injects transient flips at a known `p_bit` and the
+        scheme carries ECC, a `obs.DriftDetector` is armed on the monitor:
+        observed correction rates vs the closed-form expectation become a
+        health signal in `monitor.summary()["drift"]`."""
         self.scheme = scheme or self._default_scheme()
         self.protected = self.scheme.protect(self.state["params"])
         self.scrub_trajectory.n_blocks = self._n_blocks()
+        model = self._resolved_model()
+        p_bit = getattr(model, "p_bit", None)
+        if p_bit and not getattr(model, "permanent", False) \
+                and self.monitor.drift is None \
+                and isinstance(self.scheme, (DiagParityEcc, Compose)):
+            # Compose scrubs three independently corrupted copies per
+            # interval, so the expected event stream is 3x one arena's
+            copies = 3 if isinstance(self.scheme, Compose) else 1
+            self.monitor.drift = DriftDetector(
+                p_bit, self._n_blocks() * copies)
 
     def _n_blocks(self) -> int:
         return arena.arena_spec(self.state["params"]).n_blocks
@@ -201,23 +220,51 @@ class TrainLoop:
         return self.scheme.corrupt_store(self.protected, model,
                                          self._inject_key(model), dt=1.0)
 
+    def _vote_disagreements(self, corrected: int, uncorrectable: int) -> int:
+        """Vote-outcome share of a fetched scrub report.  For `Tmr` every
+        repair and every conflict IS a copy disagreement; for `Compose`
+        only the post-ECC three-way conflicts are separable from the
+        merged report (pairwise repaired disagreements are folded into
+        `corrected` with the ECC counts — a documented undercount)."""
+        if isinstance(self.scheme, Tmr):
+            return corrected + uncorrectable
+        if isinstance(self.scheme, Compose):
+            return uncorrectable
+        return 0
+
     def _scrub(self) -> bool:
         """One scheme scrub pass; returns True if a restore rolled back the
         step counter (the caller must not finish the current iteration)."""
-        fixed, report = self.scheme.scrub(self._corrupted_store())
-        self.scrub_reports.append((self.step, report))
-        # ONE host fetch per scrub interval: the monitor's restore decision
-        # genuinely needs the counter values on the host, but everything
-        # downstream (trajectory, monitor) reuses the same fetched triple —
-        # not six independent int() syncs against the device
-        corrected, parity_fixed, uncorrectable = (
-            int(v) for v in jax.device_get((report.corrected,
-                                            report.parity_fixed,
-                                            report.uncorrectable)))
+        with self.tracer.trace("scrub", step=self.step,
+                               scheme=self.scheme.name):
+            fixed, report = self.scheme.scrub(self._corrupted_store())
+            self.scrub_reports.append((self.step, report))
+            # ONE host fetch per scrub interval: the monitor's restore
+            # decision genuinely needs the counter values on the host, but
+            # everything downstream (trajectory, monitor, drift detector)
+            # reuses the same fetched triple — not six independent int()
+            # syncs against the device
+            corrected, parity_fixed, uncorrectable = (
+                int(v) for v in jax.device_get((report.corrected,
+                                                report.parity_fixed,
+                                                report.uncorrectable)))
         self.scrub_trajectory.add(self.step, corrected, parity_fixed,
                                   uncorrectable)
-        decision = self.monitor.record_scrub(corrected, parity_fixed,
-                                             uncorrectable)
+        injected = int(self.inject_fn is not None
+                       or self._resolved_model() is not None)
+        record = ScrubMetrics(
+            corrected=corrected, parity_fixed=parity_fixed,
+            uncorrectable=uncorrectable, injected=injected,
+            vote_disagreements=self._vote_disagreements(corrected,
+                                                        uncorrectable))
+        decision = self.monitor.record_scrub(record)
+        self.tracer.metrics({"step": self.step, "scheme": self.scheme.name,
+                             "corrected": corrected,
+                             "parity_fixed": parity_fixed,
+                             "uncorrectable": uncorrectable,
+                             "vote_disagreements":
+                             record.vote_disagreements,
+                             "decision": decision}, kind="scrub")
         if decision == Decision.RESTART and self.ckpt is not None \
                 and self.ckpt.latest_step() is not None:
             if self._consecutive_scrub_restores < self.cfg.max_scrub_restores:
@@ -259,6 +306,7 @@ class TrainLoop:
         self.ckpt.wait()
         if self.ckpt.latest_step() is None:
             return False
+        self.tracer.instant("restore", step=self.step)
         snap = self.ckpt.restore()
         self.state = jax.tree.map(jax.numpy.asarray, snap["state"])
         self.total_restores += 1
@@ -313,9 +361,10 @@ class TrainLoop:
             if fail_at is not None and self.step == fail_at:
                 raise RuntimeError(f"simulated preemption at step {self.step}")
             t0 = time.perf_counter()
-            batch = self.batch_at(self.step)
-            self.state, metrics = self.train_step(self.state, batch)
-            jax.block_until_ready(metrics)
+            with self.tracer.trace("train_step", step=self.step):
+                batch = self.batch_at(self.step)
+                self.state, metrics = self.train_step(self.state, batch)
+                jax.block_until_ready(metrics)
             dt = time.perf_counter() - t0
             decision = self.monitor.record_step(dt)
             self.step += 1
@@ -323,6 +372,13 @@ class TrainLoop:
                 loss = float(metrics.get("loss", metrics.get("total", np.nan)))
                 self.log(f"step {self.step:5d} loss {loss:.4f} ({dt:.3f}s)")
                 self.metrics_history.append((self.step, loss))
+                # heartbeat as a structured event: step timing + monitor
+                # state, one JSONL record / counter track per log interval
+                self.tracer.metrics(
+                    {"step": self.step, "loss": loss, "step_s": dt,
+                     **{k: v for k, v in self.monitor.summary().items()
+                        if not isinstance(v, dict)}}, kind="heartbeat")
+                self.tracer.counter("step_s", dt)
             if self.protected is not None:
                 self._refresh()
                 if c.scrub_every and self.step % c.scrub_every == 0:
@@ -332,11 +388,13 @@ class TrainLoop:
                     and self.step % c.eval_every == 0:
                 # post-scrub, so the store the eval sees is the corrected
                 # one; results stay on device (fetch after training)
-                self.eval_history.append(
-                    self.eval_fn(self.state["params"], self.step))
+                with self.tracer.trace("eval", step=self.step):
+                    self.eval_history.append(
+                        self.eval_fn(self.state["params"], self.step))
             if (c.checkpoint_every and self.step % c.checkpoint_every == 0) \
                     or decision == Decision.CHECKPOINT_NOW:
-                self.save()
+                with self.tracer.trace("checkpoint", step=self.step):
+                    self.save()
         if self.ckpt is not None:
             self.ckpt.wait()
         return {"final_step": self.step, "monitor": self.monitor.summary(),

@@ -14,8 +14,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional
+
+from ..obs import DriftDetector, ScrubMetrics
 
 __all__ = ["HeartbeatMonitor", "StragglerPolicy", "Decision"]
 
@@ -35,7 +38,8 @@ class StragglerPolicy:
 
 
 class HeartbeatMonitor:
-    def __init__(self, policy: StragglerPolicy = StragglerPolicy()):
+    def __init__(self, policy: StragglerPolicy = StragglerPolicy(),
+                 drift: Optional[DriftDetector] = None):
         self.policy = policy
         self.times: Deque[float] = deque(maxlen=policy.window)
         self.consecutive_slow = 0
@@ -45,6 +49,13 @@ class HeartbeatMonitor:
         self.bits_corrected = 0
         self.parity_fixed = 0
         self.uncorrectable = 0
+        self.vote_disagreements = 0
+        self.faults_injected = 0
+        #: optional obs.DriftDetector — observed correction rates vs the
+        #: closed-form model; attached by TrainLoop.attach_scheme when the
+        #: loop injects at a known p_bit (or set directly)
+        self.drift = drift
+        self._was_drifting = False
 
     def record_step(self, seconds: float) -> str:
         self.last_heartbeat = time.monotonic()
@@ -60,16 +71,42 @@ class HeartbeatMonitor:
             return Decision.CHECKPOINT_NOW
         return Decision.CONTINUE
 
-    def record_scrub(self, corrected: int, parity_fixed: int,
-                     uncorrectable: int) -> str:
-        """Ingest one ScrubReport; uncorrectable blocks demand RESTART."""
+    def record_scrub(self, record, parity_fixed: Optional[int] = None,
+                     uncorrectable: Optional[int] = None) -> str:
+        """Ingest one scrub interval's `obs.ScrubMetrics`; uncorrectable
+        blocks demand RESTART.
+
+        The bare-int triple ``record_scrub(corrected, parity_fixed,
+        uncorrectable)`` is deprecated (one release): it silently dropped
+        vote disagreements and injected-fault counts on the floor.
+        """
+        if not isinstance(record, ScrubMetrics):
+            warnings.warn(
+                "record_scrub(corrected, parity_fixed, uncorrectable) with "
+                "bare ints is deprecated; pass an obs.ScrubMetrics record "
+                "(removal next release)", DeprecationWarning, stacklevel=2)
+            record = ScrubMetrics(corrected=int(record),
+                                  parity_fixed=int(parity_fixed or 0),
+                                  uncorrectable=int(uncorrectable or 0))
         self.scrubs += 1
-        self.bits_corrected += int(corrected)
-        self.parity_fixed += int(parity_fixed)
-        self.uncorrectable += int(uncorrectable)
-        if int(uncorrectable) > 0:
+        self.bits_corrected += record.corrected
+        self.parity_fixed += record.parity_fixed
+        self.uncorrectable += record.uncorrectable
+        self.vote_disagreements += record.vote_disagreements
+        self.faults_injected += record.injected
+        if self.drift is not None:
+            status = self.drift.observe(record.corrected,
+                                        record.uncorrectable)
+            if status.drifting and not self._was_drifting:
+                self.flags.append(
+                    f"correction-rate drift: observed "
+                    f"{status.observed_per_scrub:.3g}/scrub vs expected "
+                    f"{status.expected_per_scrub:.3g} "
+                    f"({'hot' if status.hot else 'cold'})")
+            self._was_drifting = status.drifting
+        if record.uncorrectable > 0:
             self.flags.append(
-                f"uncorrectable ECC: {int(uncorrectable)} blocks")
+                f"uncorrectable ECC: {record.uncorrectable} blocks")
             return Decision.RESTART
         return Decision.CONTINUE
 
@@ -83,10 +120,15 @@ class HeartbeatMonitor:
         return s[len(s) // 2]
 
     def summary(self) -> Dict:
-        return {"median_step_s": self.median(),
-                "consecutive_slow": self.consecutive_slow,
-                "n_flags": len(self.flags),
-                "scrubs": self.scrubs,
-                "bits_corrected": self.bits_corrected,
-                "parity_fixed": self.parity_fixed,
-                "uncorrectable": self.uncorrectable}
+        out = {"median_step_s": self.median(),
+               "consecutive_slow": self.consecutive_slow,
+               "n_flags": len(self.flags),
+               "scrubs": self.scrubs,
+               "bits_corrected": self.bits_corrected,
+               "parity_fixed": self.parity_fixed,
+               "uncorrectable": self.uncorrectable,
+               "vote_disagreements": self.vote_disagreements,
+               "faults_injected": self.faults_injected}
+        if self.drift is not None:
+            out["drift"] = self.drift.status().as_dict()
+        return out

@@ -200,7 +200,8 @@ def test_telemetry_stays_on_device_until_fetch():
         assert isinstance(v, jax.Array)     # no host transfer yet
     stats = fetch_telemetry(telem)
     assert set(stats) == {"tmr_step_disagreements",
-                          "tmr_final_disagreements"}
+                          "tmr_final_disagreements", "tokens_emitted"}
+    assert int(stats["tokens_emitted"]) == B * GEN
 
 
 def test_ttft_returns_first_token():
