@@ -2,11 +2,13 @@
 the committed `benchmarks/baseline.json`.
 
 Rows from the guarded modules (netlist_bench, campaign_mc, serve_bench,
-obs_overhead) are compared by name on their throughput signals:
+serve_load, obs_overhead) are compared by name on their throughput
+signals:
 
 * ratio signals from `derived` (``speedup_vs_scan=`` for the netlist
   engines, ``speedup_vs_loop=`` / ``tmr_amortization=`` for the serving
-  engine, ``telemetry_efficiency=`` for the observability overhead) are
+  engine, ``goodput_gain=`` for the continuous-batching scheduler,
+  ``telemetry_efficiency=`` for the observability overhead) are
   machine-INDEPENDENT and compared directly — they catch
   engine-relative regressions regardless of how fast the CI runner is;
 * absolute signals (``gate_evals_per_s=`` / ``tok_s=`` rates,
@@ -37,12 +39,12 @@ import sys
 from typing import Dict, Tuple
 
 GUARDED_MODULES = ("netlist_bench", "campaign_mc", "serve_bench",
-                   "obs_overhead")
+                   "serve_load", "obs_overhead")
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
 _RATE_RE = re.compile(r"(gate_evals_per_s|tok_s)=([0-9.eE+-]+)")
 _RATIO_RE = re.compile(
     r"(speedup_vs_scan|speedup_vs_loop|tmr_amortization"
-    r"|telemetry_efficiency)=([0-9.eE+-]+)x")
+    r"|goodput_gain|telemetry_efficiency)=([0-9.eE+-]+)x")
 # latency-tail metrics from serve_bench's chunked rows: lower-better
 # times, machine-normalized like any other absolute timing.  Guarding
 # p99 alongside p50 catches tail-only regressions (a fatter distribution

@@ -1,0 +1,132 @@
+"""Continuous-batching load benchmark: wall-clock goodput of the
+chunk-boundary scheduler (paged ECC-protected KV pool, DESIGN.md §16)
+against sequential whole-batch serving on a skewed Poisson trace.
+
+The workload continuous batching exists for: mostly-short generations
+with a heavy tail (3:1 two-token vs cap-length, interleaved so every
+arrival-order group of `slots` contains a long request).  Whole-batch
+serving takes requests `slots` at a time in arrival order and pads every
+row of a group to the group's longest generation (the fixed-batch engine
+contract — each distinct group length gets its own compiled engine, a
+*generous* baseline; padding to gen_cap would be worse).  The scheduler
+instead recycles a short request's slot and pages at the next chunk
+boundary.
+
+Guarded signals (check_regression):
+
+* ``goodput_gain`` — machine-independent ratio: whole-batch wall time /
+  scheduler wall time over the same trace (same useful tokens).  The
+  acceptance bar is >= 2x on the skewed trace — for the ECC row this
+  depends on the touched-pages incremental parity refresh (a full-pool
+  re-encode per tick prices ECC serving out of the win); the guard
+  catches either collapsing.
+* ``tok_s`` on both rows and ``ttft_p50/p99`` on the scheduler row —
+  machine-normalized absolutes; p99 catches tail-only scheduling
+  regressions (admission starvation fattens TTFT p99 while goodput
+  means move little).
+
+Run: PYTHONPATH=src python -m benchmarks.run --only serve_load --smoke
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+try:
+    from . import _path  # noqa: F401
+except ImportError:
+    import _path  # noqa: F401
+
+import jax
+import numpy as np
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run():
+    from repro.configs import get_config
+    from repro.launch import (BatchSpec, ContinuousBatcher,
+                              GenerationEngine, poisson_trace)
+    from repro.models import params as P
+    from repro.models import transformer as T
+    from repro.reliability import parse_scheme
+
+    key = jax.random.PRNGKey(0)
+    # smoke-scale model (the serve_bench model-scale regime): per-step
+    # compute dominates dispatch, so slot-step savings reach wall clock
+    cfg = get_config("phi3-mini-3.8b").smoke()
+    params = P.materialize(key, T.model_specs(cfg))
+
+    SLOTS, CHUNK, PROMPT = 4, 8, 16
+    GEN_CAP, N = (128, 16) if SMOKE else (192, 24)
+    repeats = 3
+    spec = BatchSpec(slots=SLOTS, page_tokens=8, chunk=CHUNK,
+                     prompt_buckets=(PROMPT,), gen_cap=GEN_CAP)
+    # Poisson arrivals; deterministic 3:1 short/long mix with the longs
+    # interleaved — every whole-batch group pays its long request's cap
+    trace = poisson_trace(N, rate_rps=50.0, spec=spec, vocab=cfg.vocab,
+                          seed=0)
+    trace = [dataclasses.replace(r, gen=GEN_CAP if i % SLOTS == 0 else 2)
+             for i, r in enumerate(trace)]
+    useful = sum(r.gen for r in trace)
+    order = sorted(trace, key=lambda r: r.arrival_s)
+    groups = [order[g:g + SLOTS] for g in range(0, len(order), SLOTS)]
+
+    rows = []
+    for name in ("off", "ecc"):
+        # -- whole-batch baseline: one engine per distinct group length --
+        engines = {}
+        for g in sorted({max(r.gen for r in grp) for grp in groups}):
+            eng = GenerationEngine(cfg, parse_scheme(name), gen=g,
+                                   cache_len=spec.cache_tokens)
+            store, _ = eng.prepare(params, key=key)
+            engines[g] = (eng, store)
+
+        def whole_batch():
+            for grp in groups:
+                eng, store = engines[max(r.gen for r in grp)]
+                toks = np.stack([r.prompt for r in grp])
+                jax.block_until_ready(
+                    eng.generate(store, {"tokens": toks})[0])
+
+        whole_batch()                                  # compile/warmup
+        t_whole = min(_timed(whole_batch) for _ in range(repeats))
+
+        # -- the scheduler over the same trace (arrival order, no pacing:
+        # wall time is pure service time, same useful tokens) -----------
+        b = ContinuousBatcher(cfg, parse_scheme(name), spec)
+        b.prepare(params, key=key)
+        b.run(trace)                                   # compile/warmup
+        t_cont, results = float("inf"), None
+        for _ in range(repeats):
+            dt = time.perf_counter()
+            res = b.run(trace)
+            dt = time.perf_counter() - dt
+            if dt < t_cont:
+                t_cont, results = dt, res
+
+        ttft = np.asarray([r.ttft_s for r in results]) * 1e6
+        rows.append((
+            f"serve_load.load_whole_batch_{name}_b{SLOTS}_g{GEN_CAP}",
+            t_whole / useful * 1e6, f"tok_s={useful / t_whole:.5g}"))
+        rows.append((
+            f"serve_load.load_continuous_{name}_s{SLOTS}_c{CHUNK}"
+            f"_g{GEN_CAP}",
+            t_cont / useful * 1e6,
+            f"tok_s={useful / t_cont:.5g} "
+            f"goodput_gain={t_whole / t_cont:.2f}x "
+            f"ttft_p50={np.percentile(ttft, 50):.5g}us "
+            f"ttft_p99={np.percentile(ttft, 99):.5g}us"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived}")

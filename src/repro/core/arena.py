@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["BLOCK", "LeafSpec", "ArenaSpec", "leaf_to_words", "words_to_leaf",
-           "pack", "unpack", "arena_spec", "canonical_parts"]
+           "pack", "unpack", "arena_spec", "canonical_parts", "words_for"]
 
 BLOCK = 32  # words per ECC block == bits per word
 
@@ -37,6 +37,18 @@ def _n_elems(shape) -> int:
     for s in shape:
         out *= int(s)
     return out
+
+
+def words_for(shape, dtype) -> int:
+    """Payload words `leaf_to_words` would produce for a leaf of this
+    shape/dtype (bfloat16 packs two 16-bit halves per word) — the
+    host-side sizing primitive for arena consumers that lay out
+    fixed-granularity regions, e.g. the paged KV pool checking that one
+    KV page spans a whole number of ECC blocks."""
+    n = _n_elems(shape)
+    if jnp.dtype(dtype) == jnp.bfloat16:
+        return (n + 1) // 2
+    return n
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,5 +1,9 @@
 from . import mesh, specs
+from .batching import (BatchSpec, ContinuousBatcher, PagedKVPool, Request,
+                       RequestResult, poisson_trace, sequential_slot_steps)
 from .engine import GenerationEngine, fetch_telemetry, make_eval_hook
 
 __all__ = ["mesh", "specs", "GenerationEngine", "fetch_telemetry",
-           "make_eval_hook"]
+           "make_eval_hook", "BatchSpec", "ContinuousBatcher", "PagedKVPool",
+           "Request", "RequestResult", "poisson_trace",
+           "sequential_slot_steps"]

@@ -42,6 +42,7 @@ The interpreted reference survives as ``execution='loop'`` /
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -153,7 +154,11 @@ class GenerationEngine:
         self.mesh = mesh
         self.rules = rules if rules is not None else DEFAULT_RULES
         self._built: Dict[int, Any] = {}   # prompt_len -> compiled fns
-        self._chunk_built: Dict[int, Any] = {}  # chunk steps -> compiled fns
+        # chunk steps -> compiled fns; LRU-bounded (see _build_chunk):
+        # _chunk_sizes buckets tails to powers of two so one engine serving
+        # at one chunk size compiles at most 1 + log2(chunk) programs, and
+        # the LRU cap bounds the cache across callers sweeping chunk sizes.
+        self._chunk_built: "OrderedDict[int, Any]" = OrderedDict()
 
     # -- scheme plumbing ----------------------------------------------------
 
@@ -383,6 +388,7 @@ class GenerationEngine:
         unchunked scan bit for bit at any chunk size — no recompile per
         chunk position."""
         if n in self._chunk_built:
+            self._chunk_built.move_to_end(n)   # LRU touch
             return self._chunk_built[n]
         decode = make_decode_step(self.cfg)
         tmr = self._tmr()
@@ -432,14 +438,33 @@ class GenerationEngine:
                           if concurrent else None),
         }
         self._chunk_built[n] = fns
+        while len(self._chunk_built) > self.CHUNK_CACHE_MAX:
+            self._chunk_built.popitem(last=False)   # evict least recent
+        assert len(self._chunk_built) <= self.CHUNK_CACHE_MAX
         return fns
 
+    #: compiled-chunk cache bound: generous vs the <= 1 + log2(chunk)
+    #: sizes one serving configuration produces, small enough that a
+    #: caller sweeping chunk sizes can't grow the cache without bound.
+    CHUNK_CACHE_MAX = 8
+
     def _chunk_sizes(self, chunk: int):
+        """Chunk-size schedule for `gen - 1` decode steps: full `chunk`
+        launches, then the tail bucketed into descending powers of two —
+        every size drawn from {chunk} | {2^k < chunk}, so varying `gen`
+        at a fixed chunk size reuses at most 1 + log2(chunk) compiled
+        programs instead of compiling one per distinct tail."""
         rem = self.gen - 1
-        while rem > 0:
-            n = min(chunk, rem)
-            yield n
-            rem -= n
+        while rem >= chunk:
+            yield chunk
+            rem -= chunk
+        if rem > 0:
+            p = 1 << (rem.bit_length() - 1)
+            while rem > 0:
+                if rem >= p:
+                    yield p
+                    rem -= p
+                p >>= 1
 
     # -- public entry points ------------------------------------------------
 

@@ -33,6 +33,21 @@ out.jsonl`` appends structured telemetry records, and ``--chunk N`` runs
 chunk-compiled generation with per-chunk latency marks, reporting
 TTFT/TPOT p50/p95/p99 tails — all without adding a single device->host
 sync to the timed region.
+
+Server mode (DESIGN.md §16): ``--server`` serves an open-loop Poisson
+trace through the continuous-batching scheduler (paged ECC-protected KV
+pool, chunk-boundary admission):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
+      --server --rate 8 --requests 32 --slots 4 --scheme ecc+tmr \
+      --inject-p-bit 1e-4 --trace trace.json
+
+Arrivals are paced in real time and never wait for service; per-request
+TTFT (queue wait included) and TPOT flow through LatencyTimeline, and the
+report gives p50/p95/p99 tails plus goodput (useful tokens / wall time).
+``--gen`` becomes the per-request generation cap, ``--chunk`` the decode
+chunk between scheduling points (default 8), ``--prompt-len`` the single
+admission bucket.
 """
 from __future__ import annotations
 
@@ -50,8 +65,89 @@ from ..models import transformer as T
 from ..obs import LatencyTimeline, Tracer
 from ..reliability import Compose, DiagParityEcc, Tmr, Unprotected, \
     parse_scheme
+from .batching import BatchSpec, ContinuousBatcher, Request, poisson_trace
 from .engine import GenerationEngine, fetch_telemetry
 from .mesh import make_test_mesh
+
+
+def _run_server(args, cfg, key, params, scheme, fault, mesh) -> None:
+    """Continuous-batching server: open-loop Poisson load through the
+    chunk-boundary scheduler over the paged ECC-protected KV pool."""
+    chunk = args.chunk or 8
+    spec = BatchSpec(slots=args.slots, page_tokens=args.page_tokens,
+                     chunk=chunk, prompt_buckets=(args.prompt_len,),
+                     gen_cap=args.gen)
+    tracer = Tracer(enabled=bool(args.trace or args.metrics))
+    b = ContinuousBatcher(cfg, scheme, spec, mesh=mesh)
+    with tracer.trace("prepare", scheme=scheme.name):
+        prep = b.prepare(params, key=key,
+                         fault=fault if args.inject_p_bit else None)
+    trace = poisson_trace(args.requests, rate_rps=args.rate, spec=spec,
+                          vocab=cfg.vocab, seed=args.seed)
+    # compile the admit bucket and the tick program before the open-loop
+    # clock starts — arrivals never wait for service, so a cold compile
+    # would show up as a queue spike rather than honest latency
+    warm = [Request(10**6 + i, t.prompt, min(2, t.gen))
+            for i, t in enumerate(trace[:spec.slots])]
+    with tracer.trace("warmup"):
+        b.run(warm)
+
+    t0 = time.time()
+    with tracer.trace("serve", requests=args.requests, rate=args.rate,
+                      scheme=scheme.name):
+        results = b.run(trace, realtime=True)
+    dt = time.time() - t0
+    with tracer.trace("fetch_telemetry"):
+        stats = fetch_telemetry({**prep, **b.telemetry()})
+
+    useful = sum(len(r.tokens) for r in results)
+    goodput = useful / dt
+    ttft = np.asarray([r.ttft_s for r in results])
+    tpot = np.asarray([s for r in results for s in r.tpot_samples])
+    mesh_desc = "single" if mesh is None else \
+        "x".join(f"{a}={n}" for a, n in b.engine.exec_mesh.shape.items())
+    q = lambda a, p: float(np.percentile(a, p)) if a.size else float("nan")
+    print(f"[serve] {cfg.name} server scheme={scheme.name} mesh={mesh_desc} "
+          f"p_bit={args.inject_p_bit:g}: {args.requests} reqs @ "
+          f"{args.rate:g} rps, slots={spec.slots} chunk={chunk}: "
+          f"{useful} tokens in {dt:.1f}s (goodput {goodput:.1f} tok/s, "
+          f"{b.ticks} ticks, {b.decode_slot_steps} slot-steps)")
+    print(f"[serve] ttft p50={q(ttft, 50) * 1e3:.1f}ms "
+          f"p95={q(ttft, 95) * 1e3:.1f}ms p99={q(ttft, 99) * 1e3:.1f}ms; "
+          f"tpot p50={q(tpot, 50) * 1e3:.2f}ms p95={q(tpot, 95) * 1e3:.2f}ms "
+          f"p99={q(tpot, 99) * 1e3:.2f}ms")
+    if stats:
+        parts = []
+        if "ecc_corrected" in stats:
+            parts.append(f"ecc corrected={int(stats['ecc_corrected'])} "
+                         f"uncorrectable={int(stats['ecc_uncorrectable'])}")
+        if "tmr_final_disagreements" in stats:
+            parts.append(f"vote disagreements="
+                         f"{int(stats['tmr_final_disagreements'])}")
+        print(f"[serve] reliability (fetched after timing): "
+              f"{'; '.join(parts) or 'n/a'}")
+    if args.trace or args.metrics:
+        record = {"kind": "server", "arch": cfg.name, "scheme": scheme.name,
+                  "mesh": mesh_desc, "p_bit": args.inject_p_bit,
+                  "rate_rps": args.rate, "requests": args.requests,
+                  "slots": spec.slots, "chunk": chunk, "gen_cap": args.gen,
+                  "goodput_tok_s": goodput, "ticks": b.ticks,
+                  "decode_slot_steps": b.decode_slot_steps,
+                  "ttft_p50_s": q(ttft, 50), "ttft_p95_s": q(ttft, 95),
+                  "ttft_p99_s": q(ttft, 99),
+                  "tpot_p50_s": q(tpot, 50), "tpot_p95_s": q(tpot, 95),
+                  "tpot_p99_s": q(tpot, 99),
+                  **{k: (np.asarray(v).sum().item()
+                         if hasattr(v, "shape") else v)
+                     for k, v in stats.items()}}
+        tracer.metrics(record, kind="server")
+        if args.trace:
+            tracer.write_chrome(args.trace)
+            print(f"[serve] chrome trace -> {args.trace} "
+                  f"(load in Perfetto / chrome://tracing)")
+        if args.metrics:
+            tracer.write_jsonl(args.metrics)
+            print(f"[serve] metrics jsonl -> {args.metrics}")
 
 
 def main() -> None:
@@ -96,6 +192,22 @@ def main() -> None:
                          "per-chunk latency marks: reports TTFT/TPOT "
                          "p50/p95/p99 tails (0 = one scan launch, no "
                          "tails; bit-exact either way)")
+    ap.add_argument("--server", action="store_true",
+                    help="continuous-batching server mode: serve an "
+                         "open-loop Poisson trace through the "
+                         "chunk-boundary scheduler over the paged "
+                         "ECC-protected KV pool (DESIGN.md §16); --gen is "
+                         "the per-request cap, --chunk the decode chunk "
+                         "(default 8), --prompt-len the admission bucket")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="server mode: Poisson arrival rate, requests/s")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="server mode: number of requests in the trace")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="server mode: fixed batch slots (bounds the "
+                         "compile cache; empty slots are masked)")
+    ap.add_argument("--page-tokens", type=int, default=16,
+                    help="server mode: tokens per KV pool page")
     args = ap.parse_args()
 
     if args.tmr is not None:
@@ -125,6 +237,17 @@ def main() -> None:
                  "already per-token)")
     if args.chunk < 0:
         ap.error(f"--chunk must be >= 0, got {args.chunk}")
+    if args.server:
+        if args.engine == "loop":
+            ap.error("--server runs the compiled scheduler; --engine loop "
+                     "does not apply")
+        if args.vote_every or args.vote_cache:
+            ap.error("--server votes each finished request's tokens from "
+                     "the completion fetch; in-scan vote flags do not "
+                     "apply")
+        if args.rate <= 0 or args.requests < 1 or args.slots < 1:
+            ap.error("--server needs --rate > 0, --requests >= 1 and "
+                     "--slots >= 1")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -156,6 +279,10 @@ def main() -> None:
             ap.error(f"--mesh expects DATAxMODEL (e.g. 2x2), got "
                      f"{args.mesh!r}")
         mesh = make_test_mesh(data, model)
+
+    if args.server:
+        _run_server(args, cfg, key, params, scheme, fault, mesh)
+        return
 
     tracer = Tracer(enabled=bool(args.trace or args.metrics))
     engine = GenerationEngine(cfg, scheme, gen=args.gen,

@@ -299,32 +299,59 @@ def self_attention(p, cfg: ModelConfig, x, *, causal=True, window=0):
 def decode_self_attention(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
                           window=0):
     """Single-token decode. x: (B,1,D); cache_k/v: (B,S,KV,hd); pos: scalar
-    int32 — number of tokens already in the cache (== index to write).
+    int32 — number of tokens already in the cache (== index to write) — or
+    a (B,) int32 vector of per-row positions for continuous batching,
+    where each batch slot decodes at its own depth.
 
-    With a sliding window the cache is a ring buffer of size window."""
+    With a sliding window the cache is a ring buffer of size window (the
+    scalar-pos path only; per-row positions are linear-cache only)."""
     h = rms_norm(x, p["ln"], cfg.norm_eps)
     B = h.shape[0]
     H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
     G = H // KV
-    positions = jnp.full((1, 1), pos, jnp.int32)
-    q, k, v = _project_qkv(p, cfg, h, positions)
     S = cache_k.shape[1]
-    slot = pos % S if window else pos
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
-                                           (0, slot, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
-                                           (0, slot, 0, 0))
+    per_row = getattr(pos, "ndim", 0) == 1
+    if per_row:
+        if window:
+            raise NotImplementedError(
+                "per-row decode positions do not support sliding-window "
+                "ring caches (continuous batching is linear-cache only)")
+        positions = pos[:, None].astype(jnp.int32)          # (B, 1)
+    else:
+        positions = jnp.full((1, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, h, positions)
+    if per_row:
+        upd = jax.vmap(lambda c, u, s: jax.lax.dynamic_update_slice(
+            c, u, (s, 0, 0)))
+        cache_k = upd(cache_k, k.astype(cache_k.dtype), pos)
+        cache_v = upd(cache_v, v.astype(cache_v.dtype), pos)
+        # per-row validity; slots beyond a row's position may alias shared
+        # scratch pages of a paged pool, so zero their K/V contributions
+        # outright — exp-underflow alone would still propagate NaN/Inf
+        # garbage through 0 * NaN in the value einsum.
+        valid = jnp.arange(S)[None, :] <= pos[:, None]      # (B, S)
+        kc = jnp.where(valid[:, :, None, None], cache_k, 0)
+        vc = jnp.where(valid[:, :, None, None], cache_v, 0)
+        vmask = valid[:, None, None, None, :]
+    else:
+        slot = pos % S if window else pos
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+        # ring buffer: entries older than the window are overwritten, so
+        # slot validity is simply idx <= pos in both linear and ring cases.
+        valid = jnp.arange(S) <= pos
+        kc, vc = cache_k, cache_v
+        vmask = valid[None, None, None, None, :]
     qg = q.reshape(B, 1, KV, G, hd).astype(jnp.float32)
-    kc = cache_k.astype(jnp.float32)
-    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc) / (hd ** 0.5)
-    # ring buffer: entries older than the window are overwritten, so slot
-    # validity is simply idx <= pos in both the linear and ring cases.
-    valid = jnp.arange(S) <= pos
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                        kc.astype(jnp.float32)) / (hd ** 0.5)
+    scores = jnp.where(vmask, scores, NEG_INF)
     pmax = scores.max(axis=-1, keepdims=True)
     e = jnp.exp(scores - pmax)
     probs = e / e.sum(axis=-1, keepdims=True)
-    o = jnp.einsum("bkgqs,bskd->bqkgd", probs, cache_v.astype(jnp.float32))
+    o = jnp.einsum("bkgqs,bskd->bqkgd", probs, vc.astype(jnp.float32))
     o = o.reshape(B, 1, H * hd).astype(x.dtype)
     out = o @ p["wo"].astype(x.dtype)
     return out, cache_k, cache_v

@@ -292,6 +292,27 @@ class DiagParityEcc(Scheme):
                                                 len(self.slopes), mesh,
                                                 rules))
 
+    def encode_arena(self, buf: jax.Array) -> jax.Array:
+        """Parity table for a packed uint32 arena.
+
+        The write-back discipline for *mutable* arena state (the paged KV
+        pool, which rewrites pages every scheduler tick): re-encode after
+        each legitimate write so a later scrub never "corrects" fresh data
+        back toward a stale parity.  Device op; jit-safe."""
+        return self._op().encode(buf, slopes=self.slopes)
+
+    def scrub_arena(self, buf: jax.Array, parity: jax.Array,
+                    mesh=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Fused scrub over a packed uint32 arena that is NOT wrapped in a
+        `Protected` pytree — mutable arena-resident state such as the
+        paged KV pool.  Returns (fixed arena, fixed parity, counts) with
+        counts the (3,) int32 (corrected, parity_fixed, uncorrectable)
+        vector, all on device.  Because the word code is block-local,
+        several same-layout arenas may be concatenated along the block
+        axis and scrubbed in this ONE launch (how the pool covers all
+        three TMR copies)."""
+        return self._op().scrub(buf, parity, slopes=self.slopes, mesh=mesh)
+
     def scrub_copies(self, bufs, parities,
                      mesh=None) -> Tuple[list, list, jax.Array]:
         """Scrub N same-layout packed copies in ONE fused launch.

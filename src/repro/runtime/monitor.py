@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
@@ -76,18 +75,19 @@ class HeartbeatMonitor:
         """Ingest one scrub interval's `obs.ScrubMetrics`; uncorrectable
         blocks demand RESTART.
 
-        The bare-int triple ``record_scrub(corrected, parity_fixed,
-        uncorrectable)`` is deprecated (one release): it silently dropped
-        vote disagreements and injected-fault counts on the floor.
+        The PR-7 bare-int triple ``record_scrub(corrected, parity_fixed,
+        uncorrectable)`` is gone (it silently dropped vote disagreements
+        and injected-fault counts on the floor); passing anything but a
+        `ScrubMetrics` record raises with a migration hint.
         """
         if not isinstance(record, ScrubMetrics):
-            warnings.warn(
-                "record_scrub(corrected, parity_fixed, uncorrectable) with "
-                "bare ints is deprecated; pass an obs.ScrubMetrics record "
-                "(removal next release)", DeprecationWarning, stacklevel=2)
-            record = ScrubMetrics(corrected=int(record),
-                                  parity_fixed=int(parity_fixed or 0),
-                                  uncorrectable=int(uncorrectable or 0))
+            raise TypeError(
+                "record_scrub requires an obs.ScrubMetrics record; the "
+                "bare-int triple record_scrub(corrected, parity_fixed, "
+                "uncorrectable) was removed — migrate to record_scrub("
+                "ScrubMetrics(corrected=..., parity_fixed=..., "
+                "uncorrectable=...)) or build one from a fetched telemetry "
+                "dict with ScrubMetrics.from_fetched(stats)")
         self.scrubs += 1
         self.bits_corrected += record.corrected
         self.parity_fixed += record.parity_fixed

@@ -473,7 +473,7 @@ def test_drift_from_trajectory_and_analytics():
 
 
 # --------------------------------------------------------------------------
-# monitor: structured scrub records + deprecation shim
+# monitor: structured scrub records (bare-int triple removed)
 # --------------------------------------------------------------------------
 
 def test_monitor_structured_scrub_record():
@@ -489,13 +489,16 @@ def test_monitor_structured_scrub_record():
     assert any("uncorrectable" in f for f in mon.flags)
 
 
-def test_monitor_bare_int_shim_deprecated():
+def test_monitor_bare_int_raises():
+    """The PR-7 one-release deprecation shim is gone: the bare-int triple
+    now raises with a migration hint instead of warning."""
     mon = HeartbeatMonitor()
-    with pytest.warns(DeprecationWarning, match="ScrubMetrics"):
-        assert mon.record_scrub(4, 1, 0) == Decision.CONTINUE
-    assert mon.bits_corrected == 4 and mon.parity_fixed == 1
-    with pytest.warns(DeprecationWarning):
-        assert mon.record_scrub(0, 0, 1) == Decision.RESTART
+    with pytest.raises(TypeError, match="ScrubMetrics"):
+        mon.record_scrub(4, 1, 0)
+    with pytest.raises(TypeError, match="from_fetched"):
+        mon.record_scrub(0, 0, 1)
+    # nothing was ingested by the rejected calls
+    assert mon.scrubs == 0 and mon.bits_corrected == 0
 
 
 def test_monitor_drift_integration():
