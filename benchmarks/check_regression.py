@@ -2,8 +2,8 @@
 the committed `benchmarks/baseline.json`.
 
 Rows from the guarded modules (netlist_bench, campaign_mc, serve_bench,
-serve_load, obs_overhead) are compared by name on their throughput
-signals:
+serve_load, obs_overhead, mmpu_cost) are compared by name on their
+throughput signals:
 
 * ratio signals from `derived` (``speedup_vs_scan=`` for the netlist
   engines, ``speedup_vs_loop=`` / ``tmr_amortization=`` for the serving
@@ -11,6 +11,9 @@ signals:
   ``telemetry_efficiency=`` for the observability overhead) are
   machine-INDEPENDENT and compared directly — they catch
   engine-relative regressions regardless of how fast the CI runner is;
+* model signals (``cycles_per_token=`` / ``energy_pj_per_token=`` from
+  the mMPU cost projections) are machine-independent too but LOWER is
+  better: they guard the hardware-grounded cost axis directly;
 * absolute signals (``gate_evals_per_s=`` / ``tok_s=`` rates,
   ``ttft_p50/p99=`` / ``tpot_p50/p99=`` latency tails,
   ``us_per_call`` timings >= 10µs, ``*.total_wall_s`` seconds) are first
@@ -39,12 +42,19 @@ import sys
 from typing import Dict, Tuple
 
 GUARDED_MODULES = ("netlist_bench", "campaign_mc", "serve_bench",
-                   "serve_load", "obs_overhead")
+                   "serve_load", "obs_overhead", "mmpu_cost")
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
 _RATE_RE = re.compile(r"(gate_evals_per_s|tok_s)=([0-9.eE+-]+)")
 _RATIO_RE = re.compile(
     r"(speedup_vs_scan|speedup_vs_loop|tmr_amortization"
     r"|goodput_gain|telemetry_efficiency)=([0-9.eE+-]+)x")
+# mMPU cost-model projections (benchmarks.mmpu_cost): machine-INDEPENDENT
+# analytic numbers — pure shape arithmetic, identical on any runner — so
+# they are compared directly (no machine normalization) and lower is
+# better: a cost-model change that inflates a scheme's projected
+# cycles/energy per token beyond tolerance fails the guard.
+_MODEL_RE = re.compile(
+    r"(cycles_per_token|energy_pj_per_token)=([0-9.eE+-]+)")
 # latency-tail metrics from serve_bench's chunked rows: lower-better
 # times, machine-normalized like any other absolute timing.  Guarding
 # p99 alongside p50 catches tail-only regressions (a fatter distribution
@@ -56,10 +66,11 @@ MIN_US = 10.0   # ignore sub-10µs timings: pure dispatch noise
 
 def extract_metrics(rows) -> Dict[str, Tuple[str, float]]:
     """row list -> {metric key: (kind, value)}; kind is 'ratio' (machine-
-    independent, higher better), 'rate' (higher better) or 'time' (lower
-    better).  Wall-clock totals arrive as ``{"kind": "time", "seconds"}``
+    independent, higher better), 'model' (machine-independent, lower
+    better — the mMPU cost projections), 'rate' (higher better) or 'time'
+    (lower better).  Wall-clock totals arrive as ``{"kind": "time", "seconds"}``
     rows (benchmarks.run) and are kept in seconds."""
-    out: Dict[str, Tuple[str, float]] = {}
+    out: Dict[str, Tuple[str, float]] = {}  # kinds: ratio|model|rate|time
     for r in rows:
         if r.get("module") not in GUARDED_MODULES:
             continue
@@ -67,6 +78,8 @@ def extract_metrics(rows) -> Dict[str, Tuple[str, float]]:
         derived = r.get("derived", "")
         for label, val in _RATIO_RE.findall(derived):
             out[f"{name}:{label}"] = ("ratio", float(val))
+        for label, val in _MODEL_RE.findall(derived):
+            out[f"{name}:{label}"] = ("model", float(val))
         for label, val in _LAT_RE.findall(derived):
             if float(val) >= MIN_US:
                 out[f"{name}:{label}"] = ("time", float(val))
@@ -110,14 +123,15 @@ def compare(baseline: Dict[str, Tuple[str, float]],
     # speedups between boxes would otherwise fail spuriously); only a
     # slower machine gets its uniform factor divided out.
     machine = max(1.0, _median([w for kind, w in worse.values()
-                                if kind != "ratio"]))
+                                if kind not in ("ratio", "model")]))
     notes.append(f"machine-speed factor (median absolute worse_x, "
                  f"clamped >= 1): {machine:.2f}")
     for key, (kind, w) in sorted(worse.items()):
-        eff = w if kind == "ratio" else w / machine
+        eff = w if kind in ("ratio", "model") else w / machine
         line = (f"{key}: baseline={baseline[key][1]:.4g} "
                 f"fresh={fresh[key][1]:.4g} worse_x={w:.2f}"
-                + ("" if kind == "ratio" else f" normalized={eff:.2f}"))
+                + ("" if kind in ("ratio", "model")
+                   else f" normalized={eff:.2f}"))
         (regressions if eff > tolerance else notes).append(line)
     for key in sorted(set(fresh) - set(baseline)):
         notes.append(f"new row (not in baseline): {key}")

@@ -1,0 +1,127 @@
+"""Hardware cost projections: per-scheme mMPU cycles/energy per token
+(costmodel/, DESIGN.md §17) plus the coverage-vs-cycle-overhead frontier.
+
+For every `standard_grid()` scheme, compile one generation step into an
+MmpuEvent stream (weight reads + in-memory MAC kernel + the scheme's
+redundancy traffic) and fold it under the paper-default DeviceSpec:
+
+* ``cycles_per_token`` — device-normalized occupancy crossbar-cycles;
+  machine-INDEPENDENT (pure arithmetic over static shapes), guarded
+  directly by check_regression (kind 'model', lower is better);
+* ``energy_pj_per_token`` — switching energy, same guarantee;
+* ``overhead_x`` — cycles relative to `unprotected`; the bench *asserts*
+  the acceptance ordering off < ecc < tmr-* < ecc+tmr and that it agrees
+  with each scheme's analytical `overhead()` CostReport;
+* ``coverage`` — 1 - p_corrupt(scheme)/p_corrupt(off) from the
+  `core.analytics` closed forms at a reference exposure: the frontier's
+  reliability axis.
+
+The netlist rows price the fixed-point multiplier schedule itself
+(`lower_schedule`), and the vmap row times the vectorized grid fold.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+try:                      # package execution: python -m benchmarks.<mod>
+    from . import _path   # noqa: F401
+except ImportError:       # direct script execution
+    import _path          # noqa: F401
+
+import numpy as np
+
+from repro import costmodel as cm
+from repro.configs import get_config
+from repro.configs.mmpu_paper import get_device
+from repro.core import analytics, multpim, scheduler
+from repro.reliability.scheme import standard_grid
+
+#: reference exposure for the coverage axis (per-bit access corruption
+#: probability and batches of exposure — Fig. 5's regime)
+P_INPUT, T_BATCHES = 1e-5, 100.0
+
+
+def _coverage(name: str) -> float:
+    """1 - p_corrupt(scheme)/p_corrupt(off) from the closed forms."""
+    p_off = float(analytics.weight_corruption_baseline(P_INPUT, T_BATCHES))
+    p_ecc = float(analytics.weight_corruption_ecc(P_INPUT, T_BATCHES))
+
+    def vote(p):       # voted copy fails when >= 2 of 3 copies fail
+        return 3 * p * p * (1 - p) + p ** 3
+
+    p = {"unprotected": p_off, "ecc": p_ecc}.get(name)
+    if p is None:
+        p = vote(p_ecc) if name.startswith("ecc+") else vote(p_off)
+    return 1.0 - p / p_off
+
+
+def run() -> list:
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    spec = get_device("paper")
+    cfg = get_config("phi3-mini-3.8b")
+    if smoke:
+        cfg = cfg.smoke()
+    mac_bits = 8 if smoke else 32
+    profile = cm.StepProfile.from_model_config(cfg, batch=4,
+                                               mac_bits=mac_bits)
+
+    rows = []
+    t0 = time.time()
+    costs = cm.evaluate_grid(standard_grid(), profile, spec)
+    grid_us = (time.time() - t0) * 1e6
+
+    # determinism: a second compile+fold must be bit-identical
+    again = cm.evaluate_grid(standard_grid(), profile, spec)
+    for name, c in costs.items():
+        assert (c.occupancy_cycles, c.energy_pj) == \
+            (again[name].occupancy_cycles, again[name].energy_pj), \
+            f"non-deterministic cost for {name}"
+
+    off = costs["unprotected"].cycles_per_token
+    for name, c in costs.items():
+        over = c.cycles_per_token / off
+        rows.append((f"mmpu_cost.{name}", 0.0,
+                     f"cycles_per_token={c.cycles_per_token:.6g} "
+                     f"energy_pj_per_token={c.energy_pj_per_token:.6g} "
+                     f"overhead_x={over:.4f} coverage={_coverage(name):.6f} "
+                     f"events={c.n_events}"))
+
+    # acceptance ordering: off < ecc < every tmr-* < ecc+tmr, and the
+    # event streams must agree with the analytical overhead() ordering
+    cyc = {n: c.cycles_per_token for n, c in costs.items()}
+    tmrs = [v for n, v in cyc.items()
+            if n.startswith("tmr-")]
+    joint = [v for n, v in cyc.items() if n.startswith("ecc+")]
+    ok = (cyc["unprotected"] < cyc["ecc"] < min(tmrs)
+          and max(tmrs) < min(joint))
+    assert ok, f"scheme cost ordering violated: {cyc}"
+    occ = {s.name: s.overhead().latency_x * s.overhead().area_x
+           / s.overhead().throughput_x for s in standard_grid()}
+    order_events = sorted(cyc, key=cyc.get)
+    order_closed = sorted(occ, key=lambda n: (occ[n], cyc[n]))
+    assert order_events == order_closed, (order_events, order_closed)
+    rows.append(("mmpu_cost.ordering", 0.0,
+                 "ok=" + ">".join(sorted(cyc, key=cyc.get, reverse=True))))
+
+    # netlist path: price the multiplier schedule itself (one crossbar,
+    # column-parallel trials), cross-checking levels vs issue counts
+    sch = scheduler.schedule(multpim.multiplier_netlist(mac_bits))
+    stream = cm.lower_schedule(sch, spec, trials=spec.cols,
+                               n_outputs=2 * mac_bits)
+    c = cm.fold(stream, spec, tokens=spec.cols)
+    issues = int(sch.issue_counts(spec.rows).sum())
+    rows.append((f"mmpu_cost.netlist_mult{mac_bits}", 0.0,
+                 f"cycles_per_token={c.cycles_per_token:.6g} "
+                 f"energy_pj_per_token={c.energy_pj_per_token:.6g} "
+                 f"levels={sch.n_levels} gates={sch.n_gates} "
+                 f"issues={issues} events={c.n_events}"))
+
+    rows.append(("mmpu_cost.grid_fold", grid_us,
+                 f"schemes={len(costs)} vmapped_fold=1"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived}")

@@ -33,8 +33,14 @@ try:                      # package execution: python -m benchmarks.<mod>
 except ImportError:       # direct script execution
     import _path          # noqa: F401
 
+from repro import costmodel as cm  # noqa: E402
 from repro.configs import get_config  # noqa: E402
+from repro.configs.mmpu_paper import get_device  # noqa: E402
 from repro.models.config import ModelConfig  # noqa: E402
+
+#: mMPU projection device (DESIGN.md §17) — the roofline's second axis:
+#: the same step priced in crossbar cycles/energy instead of TPU seconds
+MMPU_DEV = get_device("paper")
 
 
 def param_count(cfg: ModelConfig) -> Dict[str, float]:
@@ -139,6 +145,13 @@ def analyze(rec: dict) -> Optional[dict]:
                    ("collective", collective_t), key=lambda kv: kv[1])[0]
     total_overlap = max(compute_t, memory_t, collective_t)
     total_serial = compute_t + memory_t + collective_t
+    # mMPU projection: whole-step MACs (= total FLOPs / 2) over the
+    # active weights, priced under the paper-default DeviceSpec — the
+    # hardware-real counterpart of the TPU terms above
+    pc_all = param_count(cfg)
+    tokens = rec["batch"] * (1 if rec["kind"] == "decode" else rec["seq"])
+    mmpu = cm.project_macs(int(mf * dev / 2), int(pc_all["active"]),
+                           MMPU_DEV, tokens=max(1, tokens))
     return {
         "arch": rec["arch"], "shape": rec["shape"],
         "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
@@ -154,6 +167,11 @@ def analyze(rec: dict) -> Optional[dict]:
         "peak_gib": rec["peak_bytes"] / 2**30,
         "collective_bytes_dev": coll,
         "step_time_est_s": total_overlap,
+        "mmpu_cycles_per_token": mmpu.cycles_per_token,
+        "mmpu_energy_pj_per_token": mmpu.energy_pj_per_token,
+        "mmpu_step_t": mmpu.latency_s,
+        "mmpu_vs_tpu": (mmpu.latency_s / total_overlap
+                        if total_overlap else float("inf")),
     }
 
 
@@ -174,14 +192,17 @@ def main() -> None:
             rows.append(a)
     rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
     hdr = (f"{'arch':26s} {'shape':11s} {'mesh':8s} {'comp_ms':>8s} {'mem_ms':>8s} "
-           f"{'coll_ms':>8s} {'dom':>10s} {'MF/HLO':>8s} {'rf_ser%':>8s} {'GiB':>6s}")
+           f"{'coll_ms':>8s} {'dom':>10s} {'MF/HLO':>8s} {'rf_ser%':>8s} {'GiB':>6s} "
+           f"{'mmpu_ms':>9s} {'mmpu_uJ/tok':>11s}")
     print(hdr)
     for r in rows:
         print(f"{r['arch']:26s} {r['shape']:11s} {r['mesh']:8s} "
               f"{r['compute_t']*1e3:8.2f} {r['memory_t']*1e3:8.2f} "
               f"{r['collective_t']*1e3:8.2f} {r['dominant']:>10s} "
               f"{r['flops_ratio']:8.1f} {100*r['roofline_frac_serial']:7.1f}% "
-              f"{r['peak_gib']:6.2f}")
+              f"{r['peak_gib']:6.2f} "
+              f"{r['mmpu_step_t']*1e3:9.1f} "
+              f"{r['mmpu_energy_pj_per_token']*1e-6:11.2f}")
     out = path.replace(".jsonl", "_roofline.json")
     with open(out, "w") as f:
         json.dump(rows, f, indent=1)

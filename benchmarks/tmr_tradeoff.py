@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import costmodel as cm
+from repro.configs.mmpu_paper import get_device
 from repro.core import multpim
 from repro.core.tmr import TMR_COSTS
 from repro.reliability import Tmr, standard_grid
@@ -34,12 +36,24 @@ def run() -> list:
     base_cycles = nl.n_gates                       # 1 cycle per vectored gate
     vote_cycles = 2 * 64                           # Min3+NOT per output bit
 
+    # hardware-grounded axis (DESIGN.md §17): every scheme row carries its
+    # mMPU projection next to the analytical CostReport — the wall-clock
+    # CPU numbers below stay, but the cycles/energy columns are the
+    # device-real statement of the same trade-off
+    dev = get_device("paper")
+    profile = cm.StepProfile(weight_words=1 << 16, macs_per_token=1 << 20,
+                             tokens=1, mac_bits=8)
+    mmpu = cm.evaluate_grid(standard_grid(), profile, dev)
+
     # one code path over the scheme grid: each scheme reports its own
     # CostReport; TMR disciplines additionally get the simulator's cycle
     # accounting cross-checked against the paper's stated costs
     for scheme in standard_grid():
         cost = scheme.overhead()
-        derived = cost.describe()
+        proj = mmpu[scheme.name]
+        derived = (cost.describe()
+                   + f" mmpu_cycles_tok={proj.cycles_per_token:.4g}"
+                   + f" mmpu_pj_tok={proj.energy_pj_per_token:.4g}")
         if isinstance(scheme, Tmr):
             cycles = (_DISCIPLINE_CYCLES[scheme.discipline] * base_cycles
                       + vote_cycles)

@@ -97,6 +97,15 @@ class Schedule:
     def n_rows(self) -> int:
         return self.base + self.n_slots
 
+    def issue_counts(self, row_cap: int) -> np.ndarray:
+        """Row-parallel issues per level under a crossbar row budget:
+        level l's ``widths[l]`` gates fire in ``ceil(widths[l]/row_cap)``
+        sequential issues (the mMPU cost model's latency unit —
+        costmodel.compile.lower_schedule)."""
+        if row_cap < 1:
+            raise ValueError(f"row_cap must be >= 1, got {row_cap}")
+        return -(-self.widths.astype(np.int64) // int(row_cap))
+
 
 def _next_pow2(n: int) -> int:
     return 1 << max(0, (int(n) - 1)).bit_length()

@@ -1,0 +1,137 @@
+"""Cost evaluator: fold MmpuEvent streams into cycles / energy / per-token.
+
+The fold is a weighted dot product over the packed event arrays:
+
+* latency cycles    = sum(count * cycles[kind] * weight)
+* occupancy cycles  = sum(count * cycles[kind] * xbars * weight)
+* energy (pJ)       = sum(cells * pJ[kind]     * weight)
+
+``cycles_per_token`` reports *occupancy* — device-normalized crossbar-
+cycles — so a discipline that runs 1x as long on 3x the arrays
+(tmr-parallel) costs exactly what one that runs 3x as long on 1x does
+(tmr-serial): that matches ``CostReport.latency_x * area_x /
+throughput_x`` from ``Scheme.overhead()`` and is the paper's
+reliability-vs-throughput axis.  Wall-clock projections use latency.
+
+:func:`evaluate_grid` vectorizes the fold with ``jax.vmap`` over a
+padded scheme-grid stack so ``sweep_schemes``-style frontiers price a
+whole grid in one device call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .device import DeviceSpec
+from .events import EventArrays, MmpuEvent, stack_streams
+
+__all__ = ["MmpuCost", "fold", "fold_arrays", "evaluate_grid",
+           "project_macs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MmpuCost:
+    """Folded cost of one event stream (per `tokens` emitted tokens)."""
+    latency_cycles: float     # critical-path device cycles
+    occupancy_cycles: float   # crossbar-cycles (latency x arrays occupied)
+    energy_pj: float
+    tokens: float
+    clock_hz: float
+    n_events: int
+
+    @property
+    def cycles_per_token(self) -> float:
+        return self.occupancy_cycles / self.tokens
+
+    @property
+    def energy_pj_per_token(self) -> float:
+        return self.energy_pj / self.tokens
+
+    @property
+    def latency_s(self) -> float:
+        return self.latency_cycles / self.clock_hz
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / max(self.latency_s, 1e-30)
+
+    def describe(self) -> str:
+        return (f"cycles/token={self.cycles_per_token:.4g} "
+                f"energy/token={self.energy_pj_per_token:.4g}pJ "
+                f"latency={self.latency_s * 1e3:.4g}ms "
+                f"({self.n_events} events)")
+
+
+def _fold_terms(kind, count, cells, xbars, weight, cycle_vec, energy_vec):
+    """The jit/vmap-safe core: three weighted dots over packed arrays."""
+    cyc = cycle_vec[kind] * count * weight
+    return (jnp.sum(cyc),
+            jnp.sum(cyc * xbars),
+            jnp.sum(energy_vec[kind] * cells * weight))
+
+
+_fold_jit = jax.jit(_fold_terms)
+
+
+def fold_arrays(arrays: EventArrays, spec: DeviceSpec, *,
+                tokens: float = 1.0) -> MmpuCost:
+    lat, occ, pj = _fold_jit(
+        jnp.asarray(arrays.kind), jnp.asarray(arrays.count),
+        jnp.asarray(arrays.cells), jnp.asarray(arrays.xbars),
+        jnp.asarray(arrays.weight),
+        jnp.asarray(spec.cycle_vector()), jnp.asarray(spec.energy_vector()))
+    return MmpuCost(latency_cycles=float(lat), occupancy_cycles=float(occ),
+                    energy_pj=float(pj), tokens=float(tokens),
+                    clock_hz=spec.clock_hz, n_events=len(arrays))
+
+
+def fold(events: Sequence[MmpuEvent], spec: DeviceSpec, *,
+         tokens: float = 1.0) -> MmpuCost:
+    """Fold a plain event stream (order-independent by construction)."""
+    cost = fold_arrays(EventArrays.from_events(tuple(events)), spec,
+                       tokens=tokens)
+    return dataclasses.replace(cost, n_events=len(tuple(events)))
+
+
+def evaluate_grid(schemes: Iterable, profile, spec: DeviceSpec
+                  ) -> Dict[str, MmpuCost]:
+    """Price every scheme's step stream with ONE vmapped fold.
+
+    Streams are ragged, so they are zero-padded to a common width
+    (padding events have count=cells=0 and contribute nothing); the
+    batched fold runs as a single device call over the (S, N) stack.
+    """
+    from .compile import lower_step
+    schemes = list(schemes)
+    streams = [lower_step(s, profile, spec) for s in schemes]
+    stacked = stack_streams(streams)
+    batch = {f: jnp.asarray(np.stack([getattr(a, f) for a in stacked]))
+             for f in ("kind", "count", "cells", "xbars", "weight")}
+    lat, occ, pj = jax.vmap(
+        _fold_terms, in_axes=(0, 0, 0, 0, 0, None, None))(
+        batch["kind"], batch["count"], batch["cells"], batch["xbars"],
+        batch["weight"], jnp.asarray(spec.cycle_vector()),
+        jnp.asarray(spec.energy_vector()))
+    out: Dict[str, MmpuCost] = {}
+    for i, (s, stream) in enumerate(zip(schemes, streams)):
+        out[s.name] = MmpuCost(
+            latency_cycles=float(lat[i]), occupancy_cycles=float(occ[i]),
+            energy_pj=float(pj[i]), tokens=float(profile.tokens),
+            clock_hz=spec.clock_hz, n_events=len(stream))
+    return out
+
+
+def project_macs(macs: int, weight_words: int, spec: DeviceSpec, *,
+                 tokens: int = 1, mac_bits: int = 8) -> MmpuCost:
+    """Redundancy-free projection for roofline-style consumers: price a
+    step of `macs` total MACs over `weight_words` resident words."""
+    from .compile import StepProfile, base_step_events
+    profile = StepProfile(weight_words=max(1, weight_words),
+                          macs_per_token=max(1, macs), tokens=1,
+                          mac_bits=mac_bits)
+    cost = fold(base_step_events(profile, spec), spec, tokens=tokens)
+    return cost

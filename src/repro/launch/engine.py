@@ -122,7 +122,8 @@ class GenerationEngine:
                  gen: int, cache_len: Optional[int] = None,
                  vote_every: int = 0, vote_cache: bool = False,
                  execution: str = "scan", mesh=None,
-                 rules: Optional[ShardingRules] = None):
+                 rules: Optional[ShardingRules] = None,
+                 cost_spec=None):
         if execution not in ("scan", "loop"):
             raise ValueError(f"execution must be 'scan' or 'loop', "
                              f"got {execution!r}")
@@ -153,6 +154,12 @@ class GenerationEngine:
         self.execution = execution
         self.mesh = mesh
         self.rules = rules if rules is not None else DEFAULT_RULES
+        # optional mMPU cost projection (costmodel.DeviceSpec): when set,
+        # telemetry gains mmpu_* gauges computed from a host-side event
+        # stream compiled ONCE per batch geometry — no device work, no
+        # per-token cost; None (the default) adds exactly nothing.
+        self.cost_spec = cost_spec
+        self._mmpu_cache: Dict[int, Any] = {}
         self._built: Dict[int, Any] = {}   # prompt_len -> compiled fns
         # chunk steps -> compiled fns; LRU-bounded (see _build_chunk):
         # _chunk_sizes buckets tails to powers of two so one engine serving
@@ -173,6 +180,41 @@ class GenerationEngine:
         if isinstance(self.scheme, Compose):
             return self.scheme.tmr
         return None
+
+    # -- mMPU cost projection (costmodel, DESIGN.md §17) --------------------
+
+    def mmpu_projection(self, batch_size: int):
+        """(event stream, MmpuCost) for one full generation at this batch
+        geometry, or None without a cost_spec.  Compiled host-side and
+        cached per batch size; `serve --mmpu-events` dumps the stream."""
+        if self.cost_spec is None:
+            return None
+        key = int(batch_size)
+        if key not in self._mmpu_cache:
+            from .. import costmodel
+            profile = costmodel.StepProfile.from_model_config(
+                self.cfg, batch=key)
+            stream = costmodel.scale_stream(
+                costmodel.lower_step(self.scheme, profile, self.cost_spec),
+                self.gen)
+            cost = costmodel.fold(stream, self.cost_spec,
+                                  tokens=key * self.gen)
+            self._mmpu_cache[key] = (stream, cost)
+        return self._mmpu_cache[key]
+
+    def _finish_telemetry(self, tokens, telem):
+        """tokens_emitted plus, when cost_spec is set, the mmpu_* gauges
+        (host constants wrapped as device scalars — no transfers)."""
+        out = _with_emitted(tokens, telem)
+        proj = self.mmpu_projection(tokens.shape[0])
+        if proj is not None:
+            _, cost = proj
+            out["mmpu_cycles_per_token"] = jnp.asarray(
+                cost.cycles_per_token, jnp.float32)
+            out["mmpu_energy_pj_per_token"] = jnp.asarray(
+                cost.energy_pj_per_token, jnp.float32)
+            out["mmpu_events"] = jnp.asarray(cost.n_events, jnp.int32)
+        return out
 
     def _discipline(self) -> Optional[str]:
         tmr = self._tmr()
@@ -497,7 +539,7 @@ class GenerationEngine:
                          _disagreements(jnp.stack(outs))}
             else:
                 tokens, telem = fns["tmr_scan"](store, batch)
-            return tokens, _with_emitted(tokens, telem)
+            return tokens, self._finish_telemetry(tokens, telem)
 
     def generate_chunked(self, store, batch, *, chunk: int,
                          timeline: Optional[LatencyTimeline] = None,
@@ -554,7 +596,7 @@ class GenerationEngine:
             else:
                 tokens, telem = self._chunked_concurrent(
                     store, batch, fns, chunk, timeline, tracer)
-            return tokens, _with_emitted(tokens, telem), timeline
+            return tokens, self._finish_telemetry(tokens, telem), timeline
 
     def _chunked_concurrent(self, store, batch, fns, chunk, timeline,
                             tracer):
@@ -644,11 +686,11 @@ class GenerationEngine:
 
             if not self.copy_axis:
                 tokens = one(store)
-                return tokens, _with_emitted(tokens, {})
+                return tokens, self._finish_telemetry(tokens, {})
             outs = [one(_copy(store, i)) for i in range(3)]
             seq3 = jnp.stack(outs)
             voted = self._tmr()._vote()(*outs)
-            return voted, _with_emitted(
+            return voted, self._finish_telemetry(
                 voted, {"tmr_final_disagreements": _disagreements(seq3)})
 
     def ttft(self, store, batch) -> jax.Array:

@@ -34,6 +34,13 @@ chunk-compiled generation with per-chunk latency marks, reporting
 TTFT/TPOT p50/p95/p99 tails — all without adding a single device->host
 sync to the timed region.
 
+Hardware cost projection (DESIGN.md §17): ``--mmpu-cost`` compiles the
+serve's scheme + batch geometry into an mMPU event stream and reports
+projected crossbar-cycles and switching energy per token alongside the
+wall-clock numbers; ``--mmpu-events out.jsonl`` dumps the stream for
+offline analysis (CI uploads it next to trace.json); ``--mmpu-device``
+picks a DeviceSpec from configs.mmpu_paper.
+
 Server mode (DESIGN.md §16): ``--server`` serves an open-loop Poisson
 trace through the continuous-batching scheduler (paged ECC-protected KV
 pool, chunk-boundary admission):
@@ -174,7 +181,6 @@ def main() -> None:
                          "decode steps inside the scan (0 = only at the end)")
     ap.add_argument("--vote-cache", action="store_true",
                     help="also vote the KV caches at in-scan vote points")
-    ap.add_argument("--tmr", default=None, help=argparse.SUPPRESS)
     ap.add_argument("--inject-p-bit", type=float, default=0.0,
                     help="corrupt each weight bit of each copy w.p. p")
     ap.add_argument("--fault", default="bitflip",
@@ -206,13 +212,21 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4,
                     help="server mode: fixed batch slots (bounds the "
                          "compile cache; empty slots are masked)")
+    ap.add_argument("--mmpu-cost", action="store_true",
+                    help="project this serve onto the mMPU cost model "
+                         "(costmodel/, DESIGN.md §17): report cycles/token "
+                         "and energy/token for the chosen scheme and stamp "
+                         "mmpu_* gauges into the telemetry")
+    ap.add_argument("--mmpu-events", default=None, metavar="PATH",
+                    help="dump the compiled MmpuEvent stream as JSONL "
+                         "(implies --mmpu-cost)")
+    ap.add_argument("--mmpu-device", default="paper",
+                    help="DeviceSpec name from configs.mmpu_paper "
+                         "(default: paper)")
     ap.add_argument("--page-tokens", type=int, default=16,
                     help="server mode: tokens per KV pool page")
     args = ap.parse_args()
 
-    if args.tmr is not None:
-        ap.error("--tmr was removed; use --scheme tmr-<serial|parallel|semi>"
-                 " (DESIGN.md §12)")
     if args.engine == "loop" and (args.vote_every or args.vote_cache):
         ap.error("--vote-every/--vote-cache only apply to the scan engine "
                  "(the loop reference votes final sequences only); drop "
@@ -285,10 +299,15 @@ def main() -> None:
         return
 
     tracer = Tracer(enabled=bool(args.trace or args.metrics))
+    cost_spec = None
+    if args.mmpu_cost or args.mmpu_events:
+        from ..configs.mmpu_paper import get_device
+        cost_spec = get_device(args.mmpu_device)
     engine = GenerationEngine(cfg, scheme, gen=args.gen,
                               vote_every=args.vote_every,
                               vote_cache=args.vote_cache,
-                              execution=args.engine, mesh=mesh)
+                              execution=args.engine, mesh=mesh,
+                              cost_spec=cost_spec)
     with tracer.trace("prepare", scheme=scheme.name):
         store, prep = engine.prepare(
             params, key=key, fault=fault if args.inject_p_bit else None)
@@ -346,6 +365,15 @@ def main() -> None:
         print(f"[serve] reliability (fetched after timing): "
               f"{'; '.join(parts)}")
     print(f"[serve] cost model ({scheme.name}): {scheme.overhead().describe()}")
+    if cost_spec is not None:
+        stream, cost = engine.mmpu_projection(args.batch)
+        print(f"[serve] mMPU projection ({cost_spec.name}): "
+              f"{cost.describe()}")
+        if args.mmpu_events:
+            from ..costmodel import dump_jsonl
+            n = dump_jsonl(stream, args.mmpu_events)
+            print(f"[serve] mmpu event stream -> {args.mmpu_events} "
+                  f"({n} events)")
     if timeline is not None:
         lat = timeline.summary()
         print(f"[serve] latency tails (chunk={args.chunk}): "

@@ -69,6 +69,17 @@ SCHEMA: Tuple[MetricSpec, ...] = (
                "fault-model corruption events applied to held data copies"),
     MetricSpec("tokens_emitted", "counter",
                "tokens produced by the generation engine"),
+    # mMPU cost-model projections (costmodel/, DESIGN.md §17): host-side
+    # analytic gauges the engine stamps when built with cost_spec= —
+    # device-normalized crossbar-cycles and switching energy per token,
+    # plus the compiled event-stream length.  Gauges, not counters: they
+    # describe the batch geometry, not accumulated work.
+    MetricSpec("mmpu_cycles_per_token", "gauge",
+               "projected mMPU occupancy cycles per emitted token"),
+    MetricSpec("mmpu_energy_pj_per_token", "gauge",
+               "projected mMPU switching energy (pJ) per emitted token"),
+    MetricSpec("mmpu_events", "gauge",
+               "compiled MmpuEvent bundles in the step's event stream"),
 )
 
 

@@ -2,7 +2,7 @@
 
 Before this module the repo had three uncoordinated dispatch mechanisms:
 `ReliableStore(backend=...)` for the ECC kernels, `impl={scan,level,kernel}`
-plus the `REPRO_NETLIST_IMPL` env var for the netlist engines, and the
+plus a netlist-specific env var, and the
 per-module `interpret` plumbing of `kernels/`.  They are unified here as a
 single table mapping op names to named implementations:
 
@@ -24,9 +24,6 @@ Resolution order for `resolve(op, impl)`:
    (``REPRO_IMPL=netlist_exec=kernel,diag_parity=jnp``);
 3. the registered default.
 
-The one-release ``REPRO_NETLIST_IMPL`` alias has been removed: a set
-variable now raises with the ``REPRO_IMPL=netlist_exec=...`` migration.
-
 Every implementation is registered as a lazy loader so importing this
 module never drags in the Pallas kernel packages; `dispatch(op, impl)`
 imports on first use and caches the resolved callable.
@@ -45,10 +42,6 @@ __all__ = ["register", "ops", "implementations", "default_impl", "resolve",
            "dispatch", "use_interpret", "ENV_VAR"]
 
 ENV_VAR = "REPRO_IMPL"
-#: removed alias for ``REPRO_IMPL=netlist_exec=...`` (deprecated for one
-#: release): setting it now raises with a migration hint instead of being
-#: silently honored or silently ignored.
-_LEGACY_NETLIST_ENV = "REPRO_NETLIST_IMPL"
 _INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 
 _LOADERS: Dict[str, Dict[str, Callable[[], Callable]]] = {}
@@ -86,14 +79,7 @@ def default_impl(op: str) -> str:
 
 
 def _env_overrides() -> Tuple[Dict[str, str], Optional[str]]:
-    """Parse REPRO_IMPL into (op=impl pairs, bare token).  The removed
-    ``REPRO_NETLIST_IMPL`` alias raises here so a stale environment fails
-    loudly with the migration instead of silently changing behavior."""
-    legacy = os.environ.get(_LEGACY_NETLIST_ENV)
-    if legacy:
-        raise RuntimeError(
-            f"the REPRO_NETLIST_IMPL environment variable was removed; use "
-            f"REPRO_IMPL=netlist_exec={legacy} (DESIGN.md §12)")
+    """Parse REPRO_IMPL into (op=impl pairs, bare token)."""
     pairs: Dict[str, str] = {}
     bare: Optional[str] = None
     for token in filter(None, (t.strip() for t in

@@ -221,6 +221,16 @@ class Scheme:
     def overhead(self) -> CostReport:
         raise NotImplementedError
 
+    def cost_events(self, base, profile, spec):
+        """mMPU cost-model hookup (costmodel.compile.lower_step): extend
+        or transform a redundancy-free step event stream with this
+        scheme's redundancy traffic.  `base` is a sequence of
+        `costmodel.MmpuEvent`; `profile` a `costmodel.StepProfile`;
+        `spec` a `costmodel.DeviceSpec`.  The analytical `overhead()`
+        CostReport is the closed form these streams must agree with
+        (tests/test_costmodel.py holds both to each other)."""
+        return tuple(base)
+
     #: does the redundancy belong in a checkpoint?  True for compact parity
     #: tables; False when redundancy is full copies (rebuilt on restore).
     checkpoint_redundancy: bool = False
@@ -344,6 +354,10 @@ class DiagParityEcc(Scheme):
         return CostReport(storage_x=1.0 + len(self.slopes) / arena.BLOCK,
                           latency_x=1.26)
 
+    def cost_events(self, base, profile, spec):
+        from ..costmodel.compile import ecc_events
+        return tuple(base) + ecc_events(profile, spec, self.slopes)
+
     checkpoint_redundancy = True
 
 
@@ -449,6 +463,11 @@ class Tmr(Scheme):
         return CostReport(storage_x=3.0, latency_x=c.latency_x,
                           area_x=c.area_x, throughput_x=c.throughput_x)
 
+    def cost_events(self, base, profile, spec):
+        from ..costmodel.compile import tmr_transform, vote_events
+        return tmr_transform(base, self.discipline) \
+            + vote_events(profile, spec)
+
 
 @dataclasses.dataclass(frozen=True)
 class Compose(Scheme):
@@ -544,6 +563,16 @@ class Compose(Scheme):
                           latency_x=e.latency_x * t.latency_x,
                           area_x=e.area_x * t.area_x,
                           throughput_x=e.throughput_x * t.throughput_x)
+
+    def cost_events(self, base, profile, spec):
+        # execution triplicates under the TMR discipline; each copy
+        # carries its own parity table, so the diagonal-parity traffic
+        # covers copies=3 blocks (scrub_copies fuses them in one pass)
+        from ..costmodel.compile import ecc_events, tmr_transform, \
+            vote_events
+        return (tmr_transform(base, self.tmr.discipline)
+                + vote_events(profile, spec)
+                + ecc_events(profile, spec, self.ecc.slopes, copies=3))
 
 
 # --------------------------------------------------------------------------

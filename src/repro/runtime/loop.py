@@ -61,14 +61,6 @@ class LoopConfig:
                                   # None -> DiagParityEcc() on attach_scheme()
     max_scrub_restores: int = 3   # consecutive scheme restores before giving up
                                   # and continuing with best-effort correction
-    #: REMOVED (was deprecated one release): use scheme=DiagParityEcc(impl=...)
-    ecc_backend: dataclasses.InitVar[Optional[str]] = None
-
-    def __post_init__(self, ecc_backend):
-        if ecc_backend is not None:
-            raise TypeError(
-                "LoopConfig.ecc_backend was removed; pass "
-                "scheme=DiagParityEcc(impl=...) instead (DESIGN.md §12)")
 
 
 class TrainLoop:
@@ -101,14 +93,6 @@ class TrainLoop:
         self.scrub_trajectory = ScrubTrajectory()
         self.total_restores = 0
         self._consecutive_scrub_restores = 0
-
-    def __getattr__(self, name):
-        if name == "attach_ecc":
-            raise AttributeError(
-                "TrainLoop.attach_ecc() was removed; use attach_scheme() "
-                "(default scheme is DiagParityEcc — DESIGN.md §12)")
-        raise AttributeError(
-            f"{type(self).__name__!r} object has no attribute {name!r}")
 
     # -- reliability hooks -----------------------------------------------------
     # Protocol (paper §IV adapted): redundancy is refreshed after every

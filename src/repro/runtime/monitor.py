@@ -70,24 +70,9 @@ class HeartbeatMonitor:
             return Decision.CHECKPOINT_NOW
         return Decision.CONTINUE
 
-    def record_scrub(self, record, parity_fixed: Optional[int] = None,
-                     uncorrectable: Optional[int] = None) -> str:
+    def record_scrub(self, record: ScrubMetrics) -> str:
         """Ingest one scrub interval's `obs.ScrubMetrics`; uncorrectable
-        blocks demand RESTART.
-
-        The PR-7 bare-int triple ``record_scrub(corrected, parity_fixed,
-        uncorrectable)`` is gone (it silently dropped vote disagreements
-        and injected-fault counts on the floor); passing anything but a
-        `ScrubMetrics` record raises with a migration hint.
-        """
-        if not isinstance(record, ScrubMetrics):
-            raise TypeError(
-                "record_scrub requires an obs.ScrubMetrics record; the "
-                "bare-int triple record_scrub(corrected, parity_fixed, "
-                "uncorrectable) was removed — migrate to record_scrub("
-                "ScrubMetrics(corrected=..., parity_fixed=..., "
-                "uncorrectable=...)) or build one from a fetched telemetry "
-                "dict with ScrubMetrics.from_fetched(stats)")
+        blocks demand RESTART."""
         self.scrubs += 1
         self.bits_corrected += record.corrected
         self.parity_fixed += record.parity_fixed

@@ -1,0 +1,299 @@
+"""Trace-driven mMPU cost model (costmodel/, DESIGN.md §17).
+
+Contracts:
+* golden cycle totals — hand-counted latency/energy for a tiny 3-gate
+  netlist under hand-pickable crossbar geometries, bit-exact;
+* closed forms — ECC/TMR event-stream totals match the analytical
+  formulas they were derived from, and the scheme-grid ordering matches
+  every scheme's `overhead()` CostReport;
+* determinism — compile+fold twice is bit-identical, and the vmapped
+  grid fold agrees with per-scheme folds;
+* JSONL round-trip — dump -> load -> identical stream and fold;
+* engine integration — `cost_spec` adds mmpu_* telemetry gauges, and
+  costs nothing (no keys) when unset.
+"""
+import io
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro import costmodel as cm
+from repro.configs import get_config
+from repro.configs.mmpu_paper import get_device
+from repro.core import arena, multpim, netlist, scheduler
+from repro.costmodel import (DeviceSpec, EventArrays, MmpuEvent,
+                             StepProfile, base_step_events, dump_jsonl,
+                             ecc_events, evaluate_grid, fold,
+                             load_jsonl, lower_schedule, lower_step,
+                             scale_stream, tmr_transform, vote_events)
+from repro.costmodel.device import EVENT_KINDS
+from repro.launch.engine import GenerationEngine, fetch_telemetry
+from repro.models import params as P
+from repro.models import transformer as T
+from repro.reliability import DiagParityEcc, Tmr, Unprotected, standard_grid
+
+PAPER = get_device("paper")
+
+
+def _tiny_netlist():
+    """3 Min3 gates, 2 levels: XOR-ish tree nor(nor(a,b), nand(a,b))."""
+    b = netlist.NetlistBuilder(cse=False)
+    a, bb = b.input_bits(2)
+    b.mark_outputs([b.nor(b.nor(a, bb), b.nand(a, bb))])
+    return b.build()
+
+
+# ------------------------------------------------------- device + events
+
+def test_device_spec_validation_and_vectors():
+    with pytest.raises(ValueError):
+        DeviceSpec(name="bad", rows=0, cols=4, n_crossbars=1, clock_hz=1e9)
+    with pytest.raises(ValueError):
+        DeviceSpec(name="bad", rows=4, cols=4, n_crossbars=1, clock_hz=0)
+    spec = PAPER
+    assert spec.cycle_vector()[EVENT_KINDS.index("xor")] == spec.xor_cycles
+    assert len(spec.cycle_vector()) == len(EVENT_KINDS)
+    assert spec.row_issues(0) == 0
+    assert spec.row_issues(1) == 1
+    assert spec.row_issues(spec.rows) == 1
+    assert spec.row_issues(spec.rows + 1) == 2
+    fast = spec.replace(clock_hz=2e9)
+    assert fast.seconds(2e9) == 1.0
+    assert cm.spec_from_dict(spec.to_dict()) == spec
+
+
+def test_event_validation_and_scaling():
+    with pytest.raises(ValueError):
+        MmpuEvent(kind="bogus", count=1, cells=1)
+    with pytest.raises(ValueError):
+        MmpuEvent(kind="xor", count=-1, cells=1)
+    with pytest.raises(ValueError):
+        MmpuEvent(kind="xor", count=1, cells=1, weight=0.0)
+    e = MmpuEvent(kind="xor", count=3, cells=10, xbars=2, weight=0.5)
+    s = e.scaled(count_x=0.1, cells_x=2, xbars_x=3, weight_x=2.0)
+    assert (s.count, s.cells, s.xbars, s.weight) == (1, 20, 6, 1.0)
+    assert MmpuEvent(kind="read", count=0, cells=0).scaled(count_x=5).count == 0
+    doubled = scale_stream((e, e), 2)
+    assert all(ev.count == 6 and ev.cells == 20 for ev in doubled)
+
+
+def test_schedule_issue_counts():
+    sch = scheduler.schedule(_tiny_netlist())
+    assert list(sch.widths) == [2, 1]
+    assert list(sch.issue_counts(1024)) == [1, 1]
+    assert list(sch.issue_counts(1)) == [2, 1]
+    with pytest.raises(ValueError):
+        sch.issue_counts(0)
+
+
+# ------------------------------------------------ golden netlist lowering
+
+def test_golden_tiny_netlist_cycles():
+    """Hand-counted: load(2 inputs) + 2 levels x (init+min3) + read(1).
+
+    rows=1024 -> every level is one issue:
+      1 write + (1+1) + (1+1) + 1 read = 6 cycles.
+    """
+    sch = scheduler.schedule(_tiny_netlist())
+    spec = DeviceSpec(name="t", rows=1024, cols=4, n_crossbars=2,
+                      clock_hz=1e9)
+    cost = fold(lower_schedule(sch, spec, trials=1, n_outputs=1), spec)
+    assert cost.latency_cycles == 6.0
+    # energy: write 2 cells, init 3, min3 3, read 1 (trials=1)
+    exp_pj = (2 * spec.write_energy_pj + 3 * spec.init_energy_pj
+              + 3 * spec.min3_energy_pj + 1 * spec.read_energy_pj)
+    assert cost.energy_pj == pytest.approx(exp_pj, rel=1e-5)
+
+
+def test_golden_tiny_netlist_row_capped():
+    """rows=1 serializes width-2 work: 2 write + 2*(1+1) + (1+1) + 1 = 9."""
+    sch = scheduler.schedule(_tiny_netlist())
+    spec = DeviceSpec(name="t1", rows=1, cols=4, n_crossbars=1, clock_hz=1e9)
+    cost = fold(lower_schedule(sch, spec, trials=1, n_outputs=1), spec)
+    assert cost.latency_cycles == 9.0
+
+
+def test_golden_tiny_netlist_column_wrap():
+    """trials = 2*cols doubles every issue count, cells scale by trials."""
+    sch = scheduler.schedule(_tiny_netlist())
+    spec = DeviceSpec(name="t", rows=1024, cols=4, n_crossbars=2,
+                      clock_hz=1e9)
+    one = fold(lower_schedule(sch, spec, trials=1, n_outputs=1), spec)
+    wrap = fold(lower_schedule(sch, spec, trials=2 * spec.cols,
+                               n_outputs=1), spec)
+    assert wrap.latency_cycles == 2 * one.latency_cycles
+    assert wrap.energy_pj == pytest.approx(
+        2 * spec.cols * one.energy_pj, rel=1e-5)
+    with pytest.raises(ValueError):
+        lower_schedule(sch, spec, trials=0)
+
+
+def test_multiplier_schedule_matches_issue_counts():
+    """Closed form: latency = write_issues + sum(issues)*(init+min3) +
+    read_issues, straight from Schedule.issue_counts."""
+    sch = scheduler.schedule(multpim.multiplier_netlist(4))
+    spec = PAPER
+    stream = lower_schedule(sch, spec, trials=1, n_outputs=8)
+    cost = fold(stream, spec)
+    issues = int(sch.issue_counts(spec.rows).sum())
+    exp = (spec.row_issues(sch.base - 2) * spec.write_cycles
+           + issues * (spec.init_cycles + spec.min3_cycles)
+           + spec.row_issues(8) * spec.read_cycles)
+    assert cost.latency_cycles == float(exp)
+
+
+# ------------------------------------------------------ scheme closed forms
+
+def test_ecc_events_closed_form():
+    profile = StepProfile(weight_words=100, macs_per_token=1,
+                          scrub_interval=10)
+    slopes = (1, 2)
+    stream = ecc_events(profile, PAPER, slopes)
+    n_blocks = math.ceil(100 / arena.BLOCK)
+    rounds = PAPER.row_issues(n_blocks)
+    S, B = len(slopes), arena.BLOCK
+    cost = fold(stream, PAPER)
+    exp_cycles = (2 * (B - 1) * S * rounds * PAPER.xor_cycles
+                  + (S * rounds + rounds) * PAPER.write_cycles) / 10
+    assert cost.latency_cycles == pytest.approx(exp_cycles, rel=1e-5)
+    exp_pj = (2 * S * (B - 1) * 32 * n_blocks * PAPER.xor_energy_pj
+              + (S + 1) * 32 * n_blocks * PAPER.write_energy_pj) / 10
+    assert cost.energy_pj == pytest.approx(exp_pj, rel=1e-5)
+    # copies=3 (per-copy parity under TMR) scales everything by 3
+    tripled = fold(ecc_events(profile, PAPER, slopes, copies=3), PAPER)
+    assert tripled.energy_pj == pytest.approx(3 * cost.energy_pj, rel=1e-5)
+
+
+def test_tmr_transform_disciplines():
+    profile = StepProfile(weight_words=1 << 12, macs_per_token=1 << 12)
+    base = base_step_events(profile, PAPER)
+    b = fold(base, PAPER)
+    par = fold(tmr_transform(base, "parallel"), PAPER)
+    ser = fold(tmr_transform(base, "serial"), PAPER)
+    semi = fold(tmr_transform(base, "semi_parallel"), PAPER)
+    # parallel: same latency on 3x arrays; serial/semi: 3x latency on 1x
+    assert par.latency_cycles == b.latency_cycles
+    assert ser.latency_cycles == semi.latency_cycles == 3 * b.latency_cycles
+    # occupancy (the cycles/token axis) is exactly 3x for all disciplines
+    for c in (par, ser, semi):
+        assert c.occupancy_cycles == pytest.approx(
+            3 * b.occupancy_cycles, rel=1e-5)
+        assert c.energy_pj == pytest.approx(3 * b.energy_pj, rel=1e-5)
+    with pytest.raises(ValueError):
+        tmr_transform(base, "bogus")
+    # the full Tmr scheme additionally pays the Min3+NOT vote
+    full = fold(lower_step(Tmr("parallel"), profile, PAPER), PAPER)
+    assert full.occupancy_cycles > par.occupancy_cycles
+    assert len(vote_events(profile, PAPER)) == 4
+
+
+def test_grid_ordering_matches_overhead():
+    """Acceptance: off < ecc < every tmr-* < every ecc+tmr, and the
+    event-stream ordering equals the analytical overhead() ordering
+    (occupancy == latency_x * area_x / throughput_x)."""
+    profile = StepProfile(weight_words=1 << 12, macs_per_token=1 << 14,
+                          mac_bits=8)
+    costs = evaluate_grid(standard_grid(), profile, PAPER)
+    cyc = {n: c.cycles_per_token for n, c in costs.items()}
+    tmrs = [v for n, v in cyc.items() if n.startswith("tmr-")]
+    joint = [v for n, v in cyc.items() if n.startswith("ecc+")]
+    assert cyc["unprotected"] < cyc["ecc"] < min(tmrs)
+    assert max(tmrs) < min(joint)
+    occ = {s.name: s.overhead().latency_x * s.overhead().area_x
+           / s.overhead().throughput_x for s in standard_grid()}
+    assert sorted(cyc, key=cyc.get) == \
+        sorted(occ, key=lambda n: (occ[n], cyc[n]))
+
+
+# --------------------------------------------- determinism + round-trips
+
+def test_compile_and_fold_deterministic():
+    profile = StepProfile(weight_words=1 << 10, macs_per_token=1 << 10)
+    for scheme in (Unprotected(), DiagParityEcc(), Tmr("serial")):
+        s1 = lower_step(scheme, profile, PAPER)
+        s2 = lower_step(scheme, profile, PAPER)
+        assert s1 == s2                       # dataclass equality, exact
+        c1, c2 = fold(s1, PAPER), fold(s2, PAPER)
+        assert (c1.latency_cycles, c1.occupancy_cycles, c1.energy_pj) == \
+            (c2.latency_cycles, c2.occupancy_cycles, c2.energy_pj)
+
+
+def test_jsonl_round_trip(tmp_path):
+    profile = StepProfile(weight_words=1 << 10, macs_per_token=1 << 10)
+    stream = lower_step(DiagParityEcc(), profile, PAPER)
+    path = str(tmp_path / "events.jsonl")
+    assert dump_jsonl(stream, path) == len(stream)
+    loaded = load_jsonl(path)
+    assert loaded == stream                   # weights round-trip exactly
+    a, b = fold(stream, PAPER), fold(loaded, PAPER)
+    assert (a.latency_cycles, a.occupancy_cycles, a.energy_pj) == \
+        (b.latency_cycles, b.occupancy_cycles, b.energy_pj)
+    # file-object form too
+    buf = io.StringIO()
+    dump_jsonl(stream, buf)
+    buf.seek(0)
+    assert load_jsonl(buf) == stream
+
+
+def test_vmapped_grid_agrees_with_per_scheme_folds():
+    """The padded vmapped fold must agree with independent per-scheme
+    folds — padding rows contribute exactly nothing."""
+    profile = StepProfile(weight_words=1 << 10, macs_per_token=1 << 12)
+    grid = evaluate_grid(standard_grid(), profile, PAPER)
+    for scheme in standard_grid():
+        solo = fold(lower_step(scheme, profile, PAPER), PAPER,
+                    tokens=profile.tokens)
+        g = grid[scheme.name]
+        assert g.n_events == solo.n_events
+        np.testing.assert_allclose(g.occupancy_cycles,
+                                   solo.occupancy_cycles, rtol=1e-6)
+        np.testing.assert_allclose(g.energy_pj, solo.energy_pj, rtol=1e-6)
+
+
+def test_event_arrays_padding_is_inert():
+    e = MmpuEvent(kind="min3", count=5, cells=7, xbars=2)
+    plain = fold(( e,), PAPER)
+    padded = cm.fold_arrays(EventArrays.from_events((e,), pad_to=16), PAPER)
+    assert plain.latency_cycles == padded.latency_cycles
+    assert plain.occupancy_cycles == padded.occupancy_cycles
+    assert plain.energy_pj == padded.energy_pj
+
+
+# -------------------------------------------------------- profile + engine
+
+def test_step_profile_from_model_config():
+    cfg = get_config("phi3-mini-3.8b").smoke()
+    p = StepProfile.from_model_config(cfg, batch=3, mac_bits=8)
+    assert p.tokens == 3 and p.mac_bits == 8
+    assert p.weight_words > 0 and p.macs_per_token > 0
+    assert p.n_blocks == math.ceil(p.weight_words / arena.BLOCK)
+    with pytest.raises(ValueError):
+        StepProfile(weight_words=0, macs_per_token=1)
+
+
+def test_engine_mmpu_telemetry():
+    cfg = get_config("phi3-mini-3.8b").smoke()
+    key = jax.random.PRNGKey(0)
+    params = P.materialize(key, T.model_specs(cfg))
+    batch = {"tokens": jax.random.randint(key, (2, 8), 0, cfg.vocab)}
+
+    engine = GenerationEngine(cfg, DiagParityEcc(), gen=3, cost_spec=PAPER)
+    store, _ = engine.prepare(params, key=key)
+    _, telem = engine.generate_scan(store, batch)
+    stats = fetch_telemetry(telem)
+    assert float(stats["mmpu_cycles_per_token"]) > 0
+    assert float(stats["mmpu_energy_pj_per_token"]) > 0
+    assert int(stats["mmpu_events"]) > 0
+    # projection is compiled once per batch geometry and cached
+    assert engine.mmpu_projection(2) is engine.mmpu_projection(2)
+    stream, cost = engine.mmpu_projection(2)
+    assert float(stats["mmpu_cycles_per_token"]) == \
+        pytest.approx(cost.cycles_per_token, rel=1e-5)
+
+    plain = GenerationEngine(cfg, DiagParityEcc(), gen=3)
+    store, _ = plain.prepare(params, key=key)
+    _, telem = plain.generate_scan(store, batch)
+    assert "mmpu_cycles_per_token" not in fetch_telemetry(telem)
+    assert plain.mmpu_projection(2) is None

@@ -8,7 +8,7 @@ Bit-exactness contracts:
 * vote-every-k == vote-at-end when no faults are injected.
 
 Plus engine telemetry (on-device counters, single fetch), TTFT, the
-TrainLoop eval hook, and the serve --tmr removal.
+and the TrainLoop eval hook.
 """
 import sys
 
@@ -243,15 +243,6 @@ def test_make_eval_hook_in_train_loop(tmp_path):
         assert isinstance(e["tokens"], jax.Array)
         np.testing.assert_array_equal(np.asarray(e["tokens"]),
                                       np.asarray(ref))
-
-
-def test_serve_tmr_flag_removed(monkeypatch, capsys):
-    from repro.launch import serve
-    monkeypatch.setattr(sys, "argv",
-                        ["serve", "--smoke", "--tmr", "serial"])
-    with pytest.raises(SystemExit):
-        serve.main()
-    assert "--scheme tmr-" in capsys.readouterr().err
 
 
 def test_engine_rejects_unknown_execution():

@@ -489,18 +489,6 @@ def test_monitor_structured_scrub_record():
     assert any("uncorrectable" in f for f in mon.flags)
 
 
-def test_monitor_bare_int_raises():
-    """The PR-7 one-release deprecation shim is gone: the bare-int triple
-    now raises with a migration hint instead of warning."""
-    mon = HeartbeatMonitor()
-    with pytest.raises(TypeError, match="ScrubMetrics"):
-        mon.record_scrub(4, 1, 0)
-    with pytest.raises(TypeError, match="from_fetched"):
-        mon.record_scrub(0, 0, 1)
-    # nothing was ingested by the rejected calls
-    assert mon.scrubs == 0 and mon.bits_corrected == 0
-
-
 def test_monitor_drift_integration():
     det = DriftDetector(1e-3, 10)
     mon = HeartbeatMonitor(drift=det)

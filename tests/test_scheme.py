@@ -391,22 +391,11 @@ def test_train_loop_fresh_process_rearms_copy_scheme(tmp_path):
     assert len(loop2.scrub_reports) > 0           # scrubbing continued
 
 
-def test_removed_shims_raise_with_migration_hint(tmp_path, monkeypatch):
-    """The one-release PR-4 shims are gone: each removed name must raise
-    with a hint at the replacement (grep-clean removal, not silent)."""
-    # TrainLoop.attach_ecc -> attach_scheme
+def test_loop_attach_scheme_surface(tmp_path):
+    """The supported scheme-attachment surface (the PR-4/PR-7 raising
+    shims are fully deleted): attach_scheme defaults to DiagParityEcc
+    and the loop scrubs through it."""
     loop = _toy_loop(tmp_path, parse_scheme("ecc"))
-    with pytest.raises(AttributeError, match="attach_scheme"):
-        loop.attach_ecc()
-    # LoopConfig(ecc_backend=...) -> scheme=DiagParityEcc(impl=...)
-    with pytest.raises(TypeError, match="DiagParityEcc"):
-        LoopConfig(ecc_backend="jnp")
-    # REPRO_NETLIST_IMPL env -> REPRO_IMPL=netlist_exec=...
-    monkeypatch.setenv("REPRO_NETLIST_IMPL", "scan")
-    with pytest.raises(RuntimeError, match="REPRO_IMPL=netlist_exec=scan"):
-        backend.resolve("netlist_exec")
-    monkeypatch.delenv("REPRO_NETLIST_IMPL")
-    # the loop still works through the supported surface
     loop.attach_scheme()
     assert isinstance(loop.scheme, DiagParityEcc)
     loop.run()
