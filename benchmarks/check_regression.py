@@ -42,12 +42,13 @@ import sys
 from typing import Dict, Tuple
 
 GUARDED_MODULES = ("netlist_bench", "campaign_mc", "serve_bench",
-                   "serve_load", "obs_overhead", "mmpu_cost")
+                   "serve_load", "obs_overhead", "mmpu_cost",
+                   "ecc_frontier")
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
 _RATE_RE = re.compile(r"(gate_evals_per_s|tok_s)=([0-9.eE+-]+)")
 _RATIO_RE = re.compile(
     r"(speedup_vs_scan|speedup_vs_loop|tmr_amortization"
-    r"|goodput_gain|telemetry_efficiency)=([0-9.eE+-]+)x")
+    r"|goodput_gain|telemetry_efficiency|adaptive_speedup)=([0-9.eE+-]+)x")
 # mMPU cost-model projections (benchmarks.mmpu_cost): machine-INDEPENDENT
 # analytic numbers — pure shape arithmetic, identical on any runner — so
 # they are compared directly (no machine normalization) and lower is

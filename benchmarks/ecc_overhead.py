@@ -95,6 +95,23 @@ def run() -> list:
                  f"({scheme.overhead().describe()})"))
     rows.append(("ecc_overhead.refresh_per_leaf_20leaves", us_leaf,
                  f"speedup_arena_fused={us_leaf / us_fused:.2f}x"))
+
+    # code zoo (DESIGN.md §18): per-code encode and fused-scrub launch
+    # cost over the SAME packed arena — the maintenance tax each code
+    # charges per refresh/scrub, next to its storage/latency accounting
+    from repro.reliability import HsiaoSecDed
+    for code in (DiagParityEcc(), HsiaoSecDed()):
+        prot = code.protect(params)
+        us_enc = timed(lambda c=code: c._encode(buf))
+        us_scrub = timed(
+            lambda c=code, p=prot: c.scrub(p)[1].corrected)
+        rows.append((f"ecc_overhead.encode_{code.code_name}", us_enc,
+                     f"words={buf.shape[0]} parity_words_per_block="
+                     f"{code.n_parity_words} "
+                     f"({code.overhead().describe()})"))
+        rows.append((f"ecc_overhead.scrub_{code.code_name}", us_scrub,
+                     f"fused encode->syndrome->correct launch, "
+                     f"words={buf.shape[0]}"))
     return rows
 
 

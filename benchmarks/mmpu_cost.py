@@ -46,13 +46,23 @@ def _coverage(name: str) -> float:
     """1 - p_corrupt(scheme)/p_corrupt(off) from the closed forms."""
     p_off = float(analytics.weight_corruption_baseline(P_INPUT, T_BATCHES))
     p_ecc = float(analytics.weight_corruption_ecc(P_INPUT, T_BATCHES))
+    # Hsiao SEC-DED corrects per WORD: a double flip in a 32-word block
+    # (diag parity's failure mode, prob ~p_ecc) only defeats it when both
+    # flips land in the same 32-bit word — 31/1023 of uniform pairs —
+    # and even those are *detected* (restore path), never silent
+    p_hsiao = p_ecc * 31.0 / 1023.0
 
     def vote(p):       # voted copy fails when >= 2 of 3 copies fail
         return 3 * p * p * (1 - p) + p ** 3
 
-    p = {"unprotected": p_off, "ecc": p_ecc}.get(name)
+    p = {"unprotected": p_off, "ecc": p_ecc, "hsiao": p_hsiao}.get(name)
     if p is None:
-        p = vote(p_ecc) if name.startswith("ecc+") else vote(p_off)
+        if name.startswith("hsiao+"):
+            p = vote(p_hsiao)
+        elif name.startswith("ecc+"):
+            p = vote(p_ecc)
+        else:
+            p = vote(p_off)
     return 1.0 - p / p_off
 
 
@@ -68,11 +78,13 @@ def run() -> list:
 
     rows = []
     t0 = time.time()
-    costs = cm.evaluate_grid(standard_grid(), profile, spec)
+    grid = standard_grid(include_hsiao=True)
+    costs = cm.evaluate_grid(grid, profile, spec)
     grid_us = (time.time() - t0) * 1e6
 
     # determinism: a second compile+fold must be bit-identical
-    again = cm.evaluate_grid(standard_grid(), profile, spec)
+    again = cm.evaluate_grid(standard_grid(include_hsiao=True), profile,
+                             spec)
     for name, c in costs.items():
         assert (c.occupancy_cycles, c.energy_pj) == \
             (again[name].occupancy_cycles, again[name].energy_pj), \
@@ -87,17 +99,20 @@ def run() -> list:
                      f"overhead_x={over:.4f} coverage={_coverage(name):.6f} "
                      f"events={c.n_events}"))
 
-    # acceptance ordering: off < ecc < every tmr-* < ecc+tmr, and the
-    # event streams must agree with the analytical overhead() ordering
+    # acceptance ordering: off < every arena code < every tmr-* < every
+    # joint config, and the event streams must agree with the analytical
+    # overhead() ordering (the code zoo slots between off and TMR)
     cyc = {n: c.cycles_per_token for n, c in costs.items()}
+    eccs = [cyc["ecc"], cyc["hsiao"]]
     tmrs = [v for n, v in cyc.items()
             if n.startswith("tmr-")]
-    joint = [v for n, v in cyc.items() if n.startswith("ecc+")]
-    ok = (cyc["unprotected"] < cyc["ecc"] < min(tmrs)
+    joint = [v for n, v in cyc.items() if "+" in n]
+    ok = (cyc["unprotected"] < min(eccs) <= max(eccs) < min(tmrs)
           and max(tmrs) < min(joint))
     assert ok, f"scheme cost ordering violated: {cyc}"
     occ = {s.name: s.overhead().latency_x * s.overhead().area_x
-           / s.overhead().throughput_x for s in standard_grid()}
+           / s.overhead().throughput_x
+           for s in standard_grid(include_hsiao=True)}
     order_events = sorted(cyc, key=cyc.get)
     order_closed = sorted(occ, key=lambda n: (occ[n], cyc[n]))
     assert order_events == order_closed, (order_events, order_closed)

@@ -17,7 +17,7 @@ from .events import (EventArrays, MmpuEvent, dump_jsonl, load_jsonl,
                      scale_stream, stack_streams)
 from .compile import (StepProfile, base_step_events, ecc_events,
                       lower_schedule, lower_step, mac_kernel_events,
-                      tmr_transform, vote_events)
+                      secded_events, tmr_transform, vote_events)
 from .evaluate import MmpuCost, evaluate_grid, fold, fold_arrays, project_macs
 
 __all__ = [
@@ -25,6 +25,7 @@ __all__ = [
     "MmpuEvent", "EventArrays", "dump_jsonl", "load_jsonl", "scale_stream",
     "stack_streams",
     "StepProfile", "lower_schedule", "lower_step", "base_step_events",
-    "ecc_events", "tmr_transform", "vote_events", "mac_kernel_events",
+    "ecc_events", "secded_events", "tmr_transform", "vote_events",
+    "mac_kernel_events",
     "MmpuCost", "fold", "fold_arrays", "evaluate_grid", "project_macs",
 ]

@@ -199,6 +199,20 @@ def ecc_events(profile: StepProfile, spec: DeviceSpec,
     )
 
 
+def secded_events(profile: StepProfile, spec: DeviceSpec, *,
+                  n_checks: int = 7, copies: int = 1,
+                  tag: str = "hsiao") -> EventStream:
+    """Hsiao SEC-DED redundancy traffic: the same four-phase structure as
+    `ecc_events` (encode, parity write, syndrome, correct) with
+    ``n_checks`` masked-parity families per word instead of the 3
+    diagonal slopes — the denser H matrix is what buys per-word
+    correction and double-error detection, so the code zoo's cost
+    ordering (off < ecc < hsiao < tmr-*) falls out of the family count.
+    """
+    return ecc_events(profile, spec, tuple(range(n_checks)), copies=copies,
+                      tag=tag)
+
+
 def tmr_transform(events: Sequence[MmpuEvent], discipline: str,
                   tag: str = "tmr") -> EventStream:
     """Triplicate an execution stream per TMR discipline (paper §V).

@@ -1,0 +1,11 @@
+"""(39,32) Hsiao SEC-DED word code over the packed arena.
+
+The second arena code of the zoo (DESIGN.md §18): per-word
+single-error-correct / double-error-detect with 7 check bits per 32-bit
+word, versus diagonal parity's per-block correction with 3 parity words
+per 32-word block.  Storage 1+7/32 vs 1+3/32; in exchange every word of
+a block corrects independently and double errors are *detected* instead
+of silently miscorrected.
+"""
+from .code import CHECK_MASKS, DATA_COLUMNS, N_CHECKS  # noqa: F401
+from .ops import encode_hsiao, scrub, scrub_sharded    # noqa: F401

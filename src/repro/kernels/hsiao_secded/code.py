@@ -1,0 +1,61 @@
+"""The (39,32) Hsiao SEC-DED code: H-matrix constants shared by the
+Pallas kernel and the jnp oracle.
+
+Hsiao's construction (odd-weight-column codes, IBM JRD 1970) picks every
+data column of H with *odd* weight so single errors (odd syndrome
+weight) and double errors (even, nonzero syndrome weight) are disjoint —
+SEC-DED without the extra overall-parity row of extended Hamming.  For
+32 data bits, 7 check bits suffice: C(7,3) = 35 weight-3 patterns cover
+the 32 data columns, and the 7 unit vectors protect the check bits
+themselves.
+
+Of the 35 weight-3 columns we keep 32, dropping three greedily so the
+row weights stay balanced (Hsiao's second criterion — balanced rows
+equalize the XOR-tree depth per check bit).  The selection is a
+deterministic function of nothing but this file, so the code words are
+stable across runs/machines and safe to bake into checkpoints.
+
+Layout over the packed arena (core/arena.py): a block is 32 consecutive
+uint32 words; the redundancy row is 7 uint32 words where parity word j
+packs check bit j of word i at bit position i.  This is the same
+(n_blocks, F) table family as diagonal parity (F=7 instead of 3), so
+arena sharding, copy concatenation and checkpointing all carry over.
+
+Unlike the diagonal code — which locates one flipped bit per *block* —
+Hsiao decodes each word independently: one flip in every one of the 32
+words of a block is still corrected.  The price is 7 parity words per
+block instead of 3 and a denser encode tree.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+N_CHECKS = 7          # check bits per 32-bit data word
+DATA_BITS = 32
+
+
+def _select_columns() -> Tuple[int, ...]:
+    cand = [c for c in range(1 << N_CHECKS) if bin(c).count("1") == 3]
+    # drop 3 of the 35 candidates, each time the lexicographically first
+    # column whose rows are currently the most loaded
+    cols = list(cand)
+    for _ in range(len(cand) - DATA_BITS):
+        load = [sum((c >> j) & 1 for c in cols) for j in range(N_CHECKS)]
+        worst = max(cols, key=lambda c: (sum(load[j] for j in range(N_CHECKS)
+                                             if (c >> j) & 1), -c))
+        cols.remove(worst)
+    return tuple(cols)
+
+
+#: syndrome value produced by a single flip of data bit k (32 entries,
+#: all odd weight, pairwise distinct, none a unit vector)
+DATA_COLUMNS: Tuple[int, ...] = _select_columns()
+
+#: CHECK_MASKS[j] — the 32-bit data mask of check bit j: bit k set iff
+#: data bit k participates in check j (row j of H restricted to data)
+CHECK_MASKS: Tuple[int, ...] = tuple(
+    sum(((col >> j) & 1) << k for k, col in enumerate(DATA_COLUMNS))
+    for j in range(N_CHECKS))
+
+assert len(set(DATA_COLUMNS)) == DATA_BITS
+assert all(bin(c).count("1") == 3 for c in DATA_COLUMNS)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracle for the (39,32) Hsiao SEC-DED code.
+
+Deliberately a *different* construction from the Pallas kernel: the
+oracle expands every word to its 32 bits, multiplies by the H matrix
+mod 2, and classifies syndromes with gathers — none of which the kernel
+can afford — so a shared-bug failure mode between the two is unlikely.
+
+Contract (mirrors kernels/diag_parity): flat uint32 buffers, parity
+tables of shape (n_blocks, 7), counts as a (3,) int32 vector
+(corrected, parity_fixed, uncorrectable).  Counter semantics are
+per-WORD (each word decodes independently), unlike the per-block
+diagonal counters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .code import DATA_COLUMNS, N_CHECKS
+
+BLOCK = 32
+
+#: H restricted to the data bits: (N_CHECKS, 32) 0/1 matrix
+_H = jnp.array([[(col >> j) & 1 for col in DATA_COLUMNS]
+                for j in range(N_CHECKS)], jnp.int32)
+_COLS = jnp.array(DATA_COLUMNS, jnp.uint32)
+_UNITS = (jnp.uint32(1) << jnp.arange(N_CHECKS, dtype=jnp.uint32))
+
+
+def _bits(w: jax.Array) -> jax.Array:
+    """(..., ) uint32 -> (..., 32) int32 bit planes, LSB first."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return ((w[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+
+
+def _check_bits(words: jax.Array) -> jax.Array:
+    """words (n_blocks, 32) uint32 -> check bits (n_blocks, 32, 7) int32."""
+    return (_bits(words) @ _H.T) % 2
+
+
+def _pack_checks(chk: jax.Array) -> jax.Array:
+    """check bits (n_blocks, 32, 7) -> parity table (n_blocks, 7) uint32
+    with check bit j of word i at bit position i of parity word j."""
+    lane = jnp.uint32(1) << jnp.arange(BLOCK, dtype=jnp.uint32)
+    return (chk.astype(jnp.uint32) * lane[None, :, None]).sum(axis=1)
+
+
+def encode_hsiao_ref(buf: jax.Array) -> jax.Array:
+    """buf: flat uint32 (length multiple of 32) -> (n_blocks, 7) parity."""
+    words = buf.reshape(-1, BLOCK)
+    return _pack_checks(_check_bits(words))
+
+
+def scrub_hsiao_ref(buf: jax.Array, parity: jax.Array):
+    """Oracle scrub: (buf', parity', counts (3,) int32).
+
+    Per word: syndrome 0 -> clean; syndrome == a data column -> flip that
+    data bit (corrected); syndrome == a unit vector -> heal the stored
+    check bit (parity_fixed); any other nonzero syndrome (even weight) ->
+    detected-but-uncorrectable double error, data left untouched.
+    """
+    words = buf.reshape(-1, BLOCK)
+    chk = _check_bits(words)                               # (n, 32, 7)
+    lane = jnp.arange(BLOCK, dtype=jnp.uint32)
+    stored = ((parity[:, None, :] >> lane[None, :, None])
+              & jnp.uint32(1)).astype(jnp.int32)           # (n, 32, 7)
+    syn_bits = chk ^ stored
+    weights = (jnp.uint32(1) << jnp.arange(N_CHECKS, dtype=jnp.uint32))
+    s = (syn_bits.astype(jnp.uint32) * weights).sum(-1)    # (n, 32)
+
+    eq = s[..., None] == _COLS                             # (n, 32, 32)
+    is_data = eq.any(-1)
+    pos = jnp.argmax(eq, axis=-1).astype(jnp.uint32)
+    unit = s[..., None] == _UNITS                          # (n, 32, 7)
+    is_check = unit.any(-1)
+    uncorr = (s != 0) & ~is_data & ~is_check
+
+    fixed = words ^ jnp.where(is_data, jnp.uint32(1) << pos, jnp.uint32(0))
+    par2 = _pack_checks(stored ^ unit.astype(jnp.int32))
+    counts = jnp.stack([is_data.sum(dtype=jnp.int32),
+                        is_check.sum(dtype=jnp.int32),
+                        uncorr.sum(dtype=jnp.int32)])
+    return fixed.reshape(-1), par2, counts

@@ -77,7 +77,7 @@ from ..models.steps import make_decode_step, make_prefill_step
 from ..obs import DEFAULT_REGISTRY, LatencyTimeline, MetricsRegistry
 from ..pshard import use_mesh_and_rules
 from ..reliability.backend import dispatch as _backend
-from ..reliability.scheme import Compose, DiagParityEcc, Scheme
+from ..reliability.scheme import ArenaEcc, Compose, Scheme
 from .engine import GenerationEngine
 
 __all__ = ["BatchSpec", "Request", "RequestResult", "PagedKVPool",
@@ -201,7 +201,7 @@ class PagedKVPool:
     """
 
     def __init__(self, cfg: ModelConfig, spec: BatchSpec, *,
-                 copies: bool, ecc: Optional[DiagParityEcc] = None):
+                 copies: bool, ecc: Optional[ArenaEcc] = None):
         self.cfg, self.spec, self.ecc, self.copies = cfg, spec, ecc, copies
         L, KV, hd = cfg.n_layers, cfg.n_kv, cfg.head_dim
         self.page_shape = (L, spec.page_tokens, KV, hd)
@@ -282,13 +282,15 @@ class PagedKVPool:
         fkey = (fault, float(dt))
         if fkey not in self._inject_fns:
             ecc, aspec = self.ecc, self.arena_spec
-            op = _backend("inject_scrub")
 
             def run(k, v, parity, key):
                 buf = arena.pack({"k": k, "v": v})[0]
                 mask = fault.word_mask(key, buf, dt)
-                fixed, par2, counts = op(buf, parity, mask,
-                                         slopes=ecc.slopes)
+                # the scheme picks its fused path (diag parity routes to
+                # the dedicated inject_scrub kernel; other codes XOR+scrub
+                # inside the same jit region)
+                fixed, par2, counts = ecc.inject_scrub_arena(buf, parity,
+                                                             mask)
                 kv = arena.unpack(fixed, aspec)
                 return kv["k"], kv["v"], par2, counts
 
@@ -296,6 +298,31 @@ class PagedKVPool:
         self.k, self.v, self.parity, counts = \
             self._inject_fns[fkey](self.k, self.v, self.parity, key)
         return counts
+
+    def corrupt(self, key: jax.Array, fault, dt: float = 1.0) -> jax.Array:
+        """Corrupt-only exposure: apply one fault-model interval to the
+        pool data WITHOUT repairing it — parity stays untouched (it still
+        describes the pre-fault bits, which is exactly what a later scrub
+        or a write-back read needs to repair against).  Drives the
+        write-back-on-read and adaptive-scrub benchmarks, where faults
+        must accumulate between repair points.  Returns the on-device
+        injected-flip count."""
+        fkey = ("corrupt", fault, float(dt))
+        if fkey not in self._inject_fns:
+            aspec = self.arena_spec
+
+            def run(k, v, key):
+                buf = arena.pack({"k": k, "v": v})[0]
+                mask = fault.word_mask(key, buf, dt)
+                kv = arena.unpack(buf ^ mask, aspec)
+                injected = jnp.sum(
+                    jax.lax.population_count(mask).astype(jnp.int32))
+                return kv["k"], kv["v"], injected
+
+            self._inject_fns[fkey] = jax.jit(run)
+        self.k, self.v, injected = self._inject_fns[fkey](self.k, self.v,
+                                                          key)
+        return injected
 
     def corrupt_page(self, page: int, *, bit: int = 7, word: int = 0,
                      copy: int = 0) -> None:
@@ -316,7 +343,8 @@ class ContinuousBatcher:
 
     def __init__(self, cfg: ModelConfig, scheme: Optional[Scheme] = None,
                  spec: BatchSpec = BatchSpec(), *, mesh=None, rules=None,
-                 scrub_every: int = 0,
+                 scrub_every: int = 0, adaptive=None,
+                 forced_scrub_ticks: Optional[Sequence[int]] = None,
                  registry: MetricsRegistry = DEFAULT_REGISTRY):
         if cfg.family not in ("dense", "moe"):
             raise ValueError(
@@ -332,7 +360,7 @@ class ContinuousBatcher:
         self.scheme = self.engine.scheme
         self._copy = self.engine.copy_axis
         self._serial = self.engine._discipline() == "serial"
-        self.ecc = self.scheme if isinstance(self.scheme, DiagParityEcc) \
+        self.ecc = self.scheme if isinstance(self.scheme, ArenaEcc) \
             else self.scheme.ecc if isinstance(self.scheme, Compose) else None
         self.pool = PagedKVPool(cfg, spec, copies=self._copy, ecc=self.ecc)
         S, cap = spec.slots, spec.out_cap
@@ -348,9 +376,31 @@ class ContinuousBatcher:
         self.ticks = 0
         self.decode_slot_steps = 0
         self.scrub_every = int(scrub_every)
+        #: optional runtime.AdaptiveScrub: pay-as-you-fault scrub cadence.
+        #: Overrides scrub_every; each pool scrub's counts are fetched and
+        #: fed back (`record`) — the ONE documented exception to the
+        #: zero-sync contract, amortized away exactly when it matters
+        #: (quiet stores back off to rare scrubs, hence rare fetches).
+        self.adaptive = adaptive
+        #: replay hook: scrub at exactly these tick indices (overrides
+        #: both cadences) — lets a fixed-cadence run be replayed under a
+        #: recorded adaptive schedule for bit-exactness tests
+        self._forced_scrub = (None if forced_scrub_ticks is None
+                              else frozenset(int(t)
+                                             for t in forced_scrub_ticks))
+        #: tick indices at which the pool was scrubbed (whatever cadence
+        #: chose them) — feed back as forced_scrub_ticks to replay
+        self.scrub_ticks: List[int] = []
+        #: host callback fired at the top of every tick, before the launch
+        #: (fault-injection hook for benchmarks/tests: e.g.
+        #: ``b.on_tick = lambda b: b.pool.corrupt(next_key(), fault)``)
+        self.on_tick = None
         self._registry = registry
+        self._wb = self.ecc is not None and self.ecc.write_back
         self._telem = registry.zeros(
-            ["ecc_corrected", "ecc_parity_fixed", "ecc_uncorrectable"])
+            ["ecc_corrected", "ecc_parity_fixed", "ecc_uncorrectable",
+             "ecc_read_corrected", "ecc_read_parity_fixed",
+             "ecc_read_uncorrectable"])
         self._tokens_emitted = 0
         self._vote_disagreements = 0
         self._prep: Dict[str, Any] = {}
@@ -418,12 +468,49 @@ class ContinuousBatcher:
                               (nkb + kbase[..., None] + j).reshape(-1)])
         return parity.at[at].set(rows)
 
+    def _correct_pages(self, pk, pv, parity, pages):
+        """Write-back-on-read (DESIGN.md §18): repair exactly the pages
+        this tick is about to read, persisting both the corrected bits
+        and their healed parity rows — so hot pages never carry a fault
+        into the decode and never wait for the periodic scrub.  Runs in
+        the pool layout BEFORE the gather (the gathered cache view is
+        transposed per slot, so it cannot pair with parity rows); the
+        global parity-row arithmetic is `_refresh_parity`'s.  Duplicate
+        ids (scratch page 0 appears once per unreserved table entry)
+        correct identical bits to identical values — the scatter race is
+        benign, though a fault on scratch page 0 counts once per
+        duplicate in the returned (3,) counts (scratch never holds live
+        data, so the over-count is cosmetic)."""
+        kg = pk[:, pages] if self._copy else pk[pages]
+        vg = pv[:, pages] if self._copy else pv[pages]
+        buf, gspec = arena.pack({"k": kg, "v": vg})
+        pwb = arena.words_for(self.pool.page_shape, self.cfg.cdtype) \
+            // arena.BLOCK
+        nkb = arena.words_for(self.pool.k.shape, self.cfg.cdtype) \
+            // arena.BLOCK
+        npg = self.spec.pool_pages + 1
+        copies = jnp.arange(3 if self._copy else 1, dtype=jnp.int32)
+        kbase = (copies[:, None] * npg + pages[None, :]) * pwb
+        j = jnp.arange(pwb, dtype=jnp.int32)
+        at = jnp.concatenate([(kbase[..., None] + j).reshape(-1),
+                              (nkb + kbase[..., None] + j).reshape(-1)])
+        fixed, rows2, counts = self.ecc.scrub_arena(buf, parity[at])
+        kv = arena.unpack(fixed, gspec)
+        if self._copy:
+            pk = pk.at[:, pages].set(kv["k"])
+            pv = pv.at[:, pages].set(kv["v"])
+        else:
+            pk = pk.at[pages].set(kv["k"])
+            pv = pv.at[pages].set(kv["v"])
+        return pk, pv, parity.at[at].set(rows2), counts
+
     def _tick_program(self):
         if self._tick_fn is not None:
             return self._tick_fn
         decode = make_decode_step(self.cfg)
         chunk = self.spec.chunk
         copy, serial = self._copy, self._serial
+        wb = self.ecc is not None and self.ecc.write_back
 
         def one(params, tok, pk, pv, pos, table):
             cache = {"pos": pos, "k": self._gather(pk, table),
@@ -459,6 +546,14 @@ class ContinuousBatcher:
             return jnp.take_along_axis(table, idx, axis=1).reshape(-1)
 
         def tick(store, tok, out, pk, pv, pos, parity, table, off):
+            if wb:
+                # correct-on-read: the tick reads every table page through
+                # the gather, so repair all of them first — in the SAME
+                # launch, before the decode sees a single bit
+                pk, pv, parity, rcounts = self._correct_pages(
+                    pk, pv, parity, table.reshape(-1))
+            else:
+                rcounts = jnp.zeros((3,), jnp.int32)
             if copy:
                 def f(args):
                     p, t, k, v = args
@@ -477,7 +572,7 @@ class ContinuousBatcher:
                 out = jax.vmap(write_out)(out, toks, off)
             par = self._refresh_parity(pk, pv, parity,
                                        touched(table, pos - chunk))
-            return tok, out, pk, pv, pos, par
+            return tok, out, pk, pv, pos, par, rcounts
 
         donate = (1, 2, 3, 4, 5, 6) if jax.default_backend() != "cpu" else ()
         self._tick_fn = jax.jit(tick, donate_argnums=donate)
@@ -599,17 +694,25 @@ class ContinuousBatcher:
         `device_get` of finished rows, and only on ticks where a request
         finishes."""
         spec = self.spec
+        if self.on_tick is not None:
+            self.on_tick(self)       # pre-launch hook (fault injection)
         active = [(i, a) for i, a in enumerate(self._slots) if a is not None]
         off = np.zeros(spec.slots, np.int32)
         for i, a in active:
             off[i] = a.emitted
         with use_mesh_and_rules(self.engine.exec_mesh, self.engine.rules):
             (self._tok, self._out, self.pool.k, self.pool.v, self._pos,
-             self.pool.parity) = self._tick_program()(
+             self.pool.parity, rcounts) = self._tick_program()(
                 self.store, self._tok, self._out, self.pool.k, self.pool.v,
                 self._pos, self.pool.parity, jnp.asarray(self.table),
                 jnp.asarray(off))
         jax.block_until_ready(self._tok)
+        if self._wb:
+            # read-path repairs land in their own counters (on device)
+            self._telem = self._registry.accumulate(
+                self._telem, {"ecc_read_corrected": rcounts[0],
+                              "ecc_read_parity_fixed": rcounts[1],
+                              "ecc_read_uncorrectable": rcounts[2]})
         self.ticks += 1
         self.decode_slot_steps += spec.chunk * spec.slots
         done: List[Tuple[int, _Active]] = []
@@ -626,14 +729,30 @@ class ContinuousBatcher:
             rows = jax.device_get([self._out[..., i, :] for i, _ in done])
             for (i, a), row in zip(done, rows):
                 finished.append(self._finish(i, a, np.asarray(row)))
-        if self.scrub_every and self.ecc is not None \
-                and self.ticks % self.scrub_every == 0:
+        if self.ecc is not None and self._scrub_due():
             counts = self.pool.scrub()       # counters stay on device
+            self.scrub_ticks.append(self.ticks)
+            if self.adaptive is not None and self._forced_scrub is None:
+                # the documented zero-sync exception: the controller needs
+                # the counts on host to reschedule; one (4,)-int fetch per
+                # scrub, and scrubs get RARER as the controller backs off
+                c = np.asarray(jax.device_get(counts))
+                self.adaptive.record(self.ticks, int(c[0]), int(c[2]),
+                                     int(c[1]))
             self._telem = self._registry.accumulate(
                 self._telem, {"ecc_corrected": counts[0],
                               "ecc_parity_fixed": counts[1],
                               "ecc_uncorrectable": counts[2]})
         return finished
+
+    def _scrub_due(self) -> bool:
+        """Which cadence owns this tick: a forced replay schedule beats
+        the adaptive controller beats the fixed interval."""
+        if self._forced_scrub is not None:
+            return self.ticks in self._forced_scrub
+        if self.adaptive is not None:
+            return self.adaptive.due(self.ticks)
+        return bool(self.scrub_every) and self.ticks % self.scrub_every == 0
 
     def _finish(self, slot, a, row) -> RequestResult:
         gen = a.req.gen

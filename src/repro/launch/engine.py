@@ -59,7 +59,7 @@ from ..obs import fetch_telemetry  # noqa: F401  (re-export: the PR-5 name;
 #                                   now schema-validated by obs.registry)
 from ..optim.sharding_rules import copy_stack_pspec
 from ..pshard import DEFAULT_RULES, ShardingRules, use_mesh_and_rules
-from ..reliability.scheme import (Compose, DiagParityEcc, Scheme, Tmr,
+from ..reliability.scheme import (ArenaEcc, Compose, Scheme, Tmr,
                                   Unprotected)
 from ..core import arena
 from .mesh import fold_copy_axis
@@ -302,7 +302,7 @@ class GenerationEngine:
         with use_mesh_and_rules(mesh, self.rules):
             if isinstance(scheme, Unprotected):
                 return place(corrupt(0), {})
-            if isinstance(scheme, DiagParityEcc):
+            if isinstance(scheme, ArenaEcc):
                 prot = scheme.protect(params)
                 fixed, rep = scheme.scrub(scheme.adopt(corrupt(0),
                                                        prot.redundancy),
@@ -316,8 +316,7 @@ class GenerationEngine:
                              {})
             if isinstance(scheme, Compose):
                 buf, spec = arena.pack(params)
-                parity = scheme.ecc._op().encode(buf,
-                                                 slopes=scheme.ecc.slopes)
+                parity = scheme.ecc._encode(buf)
                 packed = [arena.pack(corrupt(i))[0] for i in range(3)]
                 bufs, _, counts = scheme.ecc.scrub_copies(
                     packed, [parity] * 3, mesh=mesh)

@@ -70,8 +70,8 @@ from ..faults import (FaultModel, RetentionDrift, StuckAtFaults,
 from ..models import params as P
 from ..models import transformer as T
 from ..obs import LatencyTimeline, Tracer
-from ..reliability import Compose, DiagParityEcc, Tmr, Unprotected, \
-    parse_scheme
+from ..reliability import ArenaEcc, Compose, Tmr, Unprotected, \
+    parse_scheme, scheme_choices, scheme_help
 from .batching import BatchSpec, ContinuousBatcher, Request, poisson_trace
 from .engine import GenerationEngine, fetch_telemetry
 from .mesh import make_test_mesh
@@ -85,7 +85,14 @@ def _run_server(args, cfg, key, params, scheme, fault, mesh) -> None:
                      chunk=chunk, prompt_buckets=(args.prompt_len,),
                      gen_cap=args.gen)
     tracer = Tracer(enabled=bool(args.trace or args.metrics))
-    b = ContinuousBatcher(cfg, scheme, spec, mesh=mesh)
+    b = ContinuousBatcher(cfg, scheme, spec, mesh=mesh,
+                          scrub_every=args.scrub_every)
+    if getattr(args, "adaptive_scrub", False) and b.ecc is not None:
+        from ..runtime import AdaptiveScrub
+        # prior sized for the POOL the controller actually scrubs
+        b.adaptive = AdaptiveScrub.from_prior(
+            args.inject_p_bit, b.pool.arena_spec.n_blocks,
+            interval0=max(1, args.scrub_every or 32))
     with tracer.trace("prepare", scheme=scheme.name):
         prep = b.prepare(params, key=key,
                          fault=fault if args.inject_p_bit else None)
@@ -165,8 +172,10 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--scheme", default="off",
-                    help="protection scheme spec: off | ecc | tmr-serial | "
-                         "tmr-parallel | tmr-semi | ecc+tmr[-<discipline>]")
+                    metavar="|".join(scheme_choices()),
+                    help="protection scheme spec, from the scheme registry"
+                         " (reliability.register_scheme) — "
+                         + scheme_help())
     ap.add_argument("--engine", default="scan", choices=["scan", "loop"],
                     help="scan: one compiled prefill+scan launch (default);"
                          " loop: interpreted per-token reference path")
@@ -209,6 +218,15 @@ def main() -> None:
                     help="server mode: Poisson arrival rate, requests/s")
     ap.add_argument("--requests", type=int, default=32,
                     help="server mode: number of requests in the trace")
+    ap.add_argument("--scrub-every", type=int, default=0, metavar="TICKS",
+                    help="server: fixed pool-scrub cadence in scheduler "
+                         "ticks (0 = no periodic scrub)")
+    ap.add_argument("--adaptive-scrub", action="store_true",
+                    help="server: pay-as-you-fault scrub cadence — the "
+                         "runtime.AdaptiveScrub controller moves the "
+                         "interval from observed correction rates "
+                         "(--scrub-every seeds interval0; overrides the "
+                         "fixed cadence)")
     ap.add_argument("--slots", type=int, default=4,
                     help="server mode: fixed batch slots (bounds the "
                          "compile cache; empty slots are masked)")
@@ -339,7 +357,7 @@ def main() -> None:
     # off/ecc stores are plain params pytrees, so the timed engine's
     # compiled single-copy program serves the clean reference without a
     # recompile; copy-axis schemes need a fresh single-copy engine
-    clean = engine if isinstance(scheme, (Unprotected, DiagParityEcc)) \
+    clean = engine if isinstance(scheme, (Unprotected, ArenaEcc)) \
         else GenerationEngine(cfg, gen=args.gen, execution=args.engine)
     ref = clean.generate(params, batch)[0] if args.inject_p_bit else out
     agree = float(np.asarray(out == ref).mean())

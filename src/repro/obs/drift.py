@@ -81,6 +81,27 @@ class DriftDetector:
         self._events.append(float(corrected) + 2.0 * float(uncorrectable))
         return self.status()
 
+    def evidence(self) -> float:
+        """The evidence mass behind the current verdict: the larger of the
+        observed and expected per-scrub event rates times the window
+        occupancy — the exact quantity `status()` holds against
+        ``min_events`` before it may flag.  Exposed so consumers (the
+        adaptive scrub controller) can distinguish "on-model" from "too
+        early to tell" without re-deriving the floor."""
+        n = len(self._events)
+        observed = sum(self._events) / n if n else 0.0
+        return max(observed, self.expected_per_scrub) * n
+
+    @property
+    def confident(self) -> bool:
+        """Has the window accumulated enough evidence for `status()` to be
+        meaningful?  False during cold start (few scrubs ingested) and for
+        sparse-fault runs whose expectation never clears the floor — in
+        both cases ``drifting`` is structurally False, and callers making
+        *decisions* (not just reading flags) must treat the verdict as
+        "unknown", not "healthy"."""
+        return self.evidence() >= self.min_events
+
     def status(self) -> DriftStatus:
         n = len(self._events)
         observed = sum(self._events) / n if n else 0.0

@@ -61,6 +61,16 @@ SCHEMA: Tuple[MetricSpec, ...] = (
                "blocks with >= 2 flips — beyond the single-error code"),
     MetricSpec("ecc_injected", "counter",
                "bit flips injected by the fused inject+scrub kernel"),
+    # write-back-on-read serving discipline (DESIGN.md §18): corrections
+    # performed on the read path — pages repaired *before* the tick reads
+    # them, instead of waiting for the periodic scrub — kept separate from
+    # the scrub counters so the two disciplines stay attributable
+    MetricSpec("ecc_read_corrected", "counter",
+               "arena words corrected by write-back-on-read page repair"),
+    MetricSpec("ecc_read_parity_fixed", "counter",
+               "parity rows healed on the write-back-on-read path"),
+    MetricSpec("ecc_read_uncorrectable", "counter",
+               "uncorrectable blocks encountered on the read path"),
     MetricSpec("tmr_step_disagreements", "series",
                "per-decode-step token positions where the 3 copies differ"),
     MetricSpec("tmr_final_disagreements", "counter",

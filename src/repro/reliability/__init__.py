@@ -7,21 +7,25 @@ Two layers:
                per-call ``impl=`` override and the ``REPRO_IMPL`` env var.
                Subsumes the old ``ReliableStore(backend=...)``, the legacy
                netlist-engine env var and per-module interpret plumbing.
-  scheme.py  — the composable `Scheme` protocol (`Unprotected`,
-               `DiagParityEcc`, `Tmr` in all three paper disciplines,
-               `Compose`) over `Protected` pytree stores.
+  scheme.py  — the composable `Scheme` protocol (`Unprotected`, the
+               `ArenaEcc` code zoo — `DiagParityEcc`, `HsiaoSecDed` —
+               `Tmr` in all three paper disciplines, `Compose`) over
+               `Protected` pytree stores, plus the spec-token registry
+               every CLI surface enumerates from.
 
 Consumers: `runtime.loop.LoopConfig.scheme`, `launch.serve --scheme`,
 `faults.campaign.sweep_schemes`, and the benchmark grid sweeps.
 """
 from . import backend
-from .scheme import (SCHEME_CHOICES, Compose, CostReport, DiagParityEcc,
-                     Protected, Scheme, Tmr, Unprotected, parse_scheme,
-                     standard_grid)
+from .scheme import (SCHEME_CHOICES, ArenaEcc, Compose, CostReport,
+                     DiagParityEcc, HsiaoSecDed, Protected, Scheme, Tmr,
+                     Unprotected, parse_scheme, register_scheme,
+                     scheme_choices, scheme_help, standard_grid)
 
 __all__ = [
     "backend",
     "Scheme", "Protected", "CostReport",
-    "Unprotected", "DiagParityEcc", "Tmr", "Compose",
-    "parse_scheme", "SCHEME_CHOICES", "standard_grid",
+    "Unprotected", "ArenaEcc", "DiagParityEcc", "HsiaoSecDed", "Tmr",
+    "Compose", "parse_scheme", "SCHEME_CHOICES", "standard_grid",
+    "register_scheme", "scheme_choices", "scheme_help",
 ]

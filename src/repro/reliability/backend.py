@@ -154,6 +154,33 @@ def _load_diag_parity_jnp():
     return SimpleNamespace(encode=encode, scrub=scrub_)
 
 
+def _load_hsiao_secded_kernel():
+    from ..kernels.hsiao_secded import encode_hsiao, scrub, scrub_sharded
+
+    def encode(buf):
+        return encode_hsiao(buf)
+
+    def scrub_(buf, parity, mesh=None):
+        if mesh is not None:
+            return scrub_sharded(buf, parity, mesh=mesh)
+        return scrub(buf, parity)
+
+    return SimpleNamespace(encode=encode, scrub=scrub_)
+
+
+def _load_hsiao_secded_jnp():
+    from ..kernels.hsiao_secded import scrub_sharded
+    from ..kernels.hsiao_secded.ref import encode_hsiao_ref, scrub_hsiao_ref
+
+    def scrub_(buf, parity, mesh=None):
+        if mesh is not None:
+            return scrub_sharded(buf, parity, mesh=mesh,
+                                 local_scrub=scrub_hsiao_ref)
+        return scrub_hsiao_ref(buf, parity)
+
+    return SimpleNamespace(encode=encode_hsiao_ref, scrub=scrub_)
+
+
 def _load_inject_scrub_kernel():
     from ..kernels.inject_scrub import inject_scrub, inject_scrub_sharded
 
@@ -219,6 +246,8 @@ def _load_crossbar_nor_jnp():
 
 register("diag_parity", "kernel", _load_diag_parity_kernel, default=True)
 register("diag_parity", "jnp", _load_diag_parity_jnp)
+register("hsiao_secded", "kernel", _load_hsiao_secded_kernel, default=True)
+register("hsiao_secded", "jnp", _load_hsiao_secded_jnp)
 register("inject_scrub", "kernel", _load_inject_scrub_kernel, default=True)
 register("inject_scrub", "jnp", _load_inject_scrub_jnp)
 register("tmr_vote", "kernel", _load_tmr_vote_kernel, default=True)

@@ -40,9 +40,10 @@ from ..core.reliability import ScrubReport
 from ..core.tmr import TMR_COSTS
 from . import backend
 
-__all__ = ["CostReport", "Protected", "Scheme", "Unprotected",
-           "DiagParityEcc", "Tmr", "Compose", "parse_scheme",
-           "SCHEME_CHOICES", "standard_grid"]
+__all__ = ["CostReport", "Protected", "Scheme", "Unprotected", "ArenaEcc",
+           "DiagParityEcc", "HsiaoSecDed", "Tmr", "Compose", "parse_scheme",
+           "SCHEME_CHOICES", "standard_grid", "register_scheme",
+           "scheme_choices", "scheme_help"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,29 +256,48 @@ class Unprotected(Scheme):
         return CostReport()
 
 
-@dataclasses.dataclass(frozen=True)
-class DiagParityEcc(Scheme):
-    """Diagonal-parity word ECC over the packed arena (paper §IV).
+class ArenaEcc(Scheme):
+    """Shared machinery for packed-arena word codes (the code zoo,
+    DESIGN.md §18): everything that depends only on the arena layout —
+    pack/protect, fused scrub, copy concatenation, parity sharding,
+    checkpointing — lives here; subclasses supply the code itself
+    (`_encode` / `_scrub` / `n_parity_words` and the cost accounting).
 
-    Wraps the `core.arena` + `kernels/diag_parity` machinery behind the
-    scheme protocol; bit-exact against `core.reliability.ReliableStore`
-    (same pack, same encode, same fused scrub, same counts).  `impl`
-    overrides the `diag_parity` backend (None -> registry default).
+    Subclasses are frozen dataclasses carrying at least ``impl``
+    (backend override) and ``write_back`` (the correct-on-read serving
+    discipline: `read_corrected` is meaningful for every ArenaEcc, but
+    a True flag tells serving paths — the paged KV pool, the batcher —
+    to correct-and-persist hot state on access instead of waiting for
+    the periodic scrub).
     """
 
-    slopes: Tuple[int, ...] = (1, 2, -1)
-    impl: Optional[str] = None
+    # spec-string token of the code family ("ecc", "hsiao") — a plain
+    # class attribute, deliberately unannotated so dataclass subclasses
+    # do not inherit it as a field
+    code_name = "ecc"
 
     @property
     def name(self) -> str:
-        return "ecc"
+        return self.code_name + ("-wb" if self.write_back else "")
 
-    def _op(self):
-        return backend.dispatch("diag_parity", self.impl)
+    @property
+    def n_parity_words(self) -> int:
+        """Redundancy words per 32-word block (the parity-table width)."""
+        raise NotImplementedError
+
+    def _encode(self, buf: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def _scrub(self, buf: jax.Array, parity: jax.Array, mesh=None):
+        raise NotImplementedError
+
+    def _ecc_events(self, profile, spec, copies: int = 1):
+        """This code's mMPU redundancy traffic (costmodel hookup)."""
+        raise NotImplementedError
 
     def protect(self, payload: Any) -> Protected:
         buf, spec = arena.pack(payload)
-        parity = self._op().encode(buf, slopes=self.slopes)
+        parity = self._encode(buf)
         prot = Protected(payload, parity, self)
         prot._packed = (buf, spec)
         return prot
@@ -286,20 +306,26 @@ class DiagParityEcc(Scheme):
               mesh=None) -> Tuple[Protected, ScrubReport]:
         buf, spec = prot._packed if prot._packed is not None \
             else arena.pack(prot.payload)
-        fixed, par2, counts = self._op().scrub(buf, prot.redundancy,
-                                               slopes=self.slopes, mesh=mesh)
+        fixed, par2, counts = self._scrub(buf, prot.redundancy, mesh=mesh)
         out = Protected(arena.unpack(fixed, spec), par2, self)
         out._packed = (fixed, spec)
         report = ScrubReport(corrected=counts[0], parity_fixed=counts[1],
                              uncorrectable=counts[2])
         return out, report
 
+    def read_corrected(self, prot: Protected, mesh=None):
+        """The write-back-on-read discipline at the scheme level: decode
+        through a fused scrub so the caller gets *corrected* bits AND the
+        corrected store persists.  Returns (payload, prot', report)."""
+        fixed, report = self.scrub(prot, mesh=mesh)
+        return fixed.payload, fixed, report
+
     def _redundancy_shardings(self, payload, pspecs, mesh, rules):
         from jax.sharding import NamedSharding
         from ..optim.sharding_rules import parity_pspec
         spec = arena.arena_spec(payload)
         return NamedSharding(mesh, parity_pspec(spec.n_blocks,
-                                                len(self.slopes), mesh,
+                                                self.n_parity_words, mesh,
                                                 rules))
 
     def encode_arena(self, buf: jax.Array) -> jax.Array:
@@ -309,7 +335,7 @@ class DiagParityEcc(Scheme):
         pool, which rewrites pages every scheduler tick): re-encode after
         each legitimate write so a later scrub never "corrects" fresh data
         back toward a stale parity.  Device op; jit-safe."""
-        return self._op().encode(buf, slopes=self.slopes)
+        return self._encode(buf)
 
     def scrub_arena(self, buf: jax.Array, parity: jax.Array,
                     mesh=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -321,7 +347,22 @@ class DiagParityEcc(Scheme):
         several same-layout arenas may be concatenated along the block
         axis and scrubbed in this ONE launch (how the pool covers all
         three TMR copies)."""
-        return self._op().scrub(buf, parity, slopes=self.slopes, mesh=mesh)
+        return self._scrub(buf, parity, mesh=mesh)
+
+    def inject_scrub_arena(self, buf: jax.Array, parity: jax.Array,
+                           mask: jax.Array, mesh=None
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Fused corrupt+repair over a packed arena: XOR the fault mask in,
+        then run the code's scrub, all inside one jit region.  Returns
+        (fixed arena, fixed parity, counts) with counts the (4,) int32
+        (injected, corrected, parity_fixed, uncorrectable) vector — the
+        fault-campaign convention.  Codes with a dedicated fused kernel
+        override this (diagonal parity routes to kernels/inject_scrub);
+        the default is correct for every block-local word code."""
+        injected = jnp.sum(
+            jax.lax.population_count(mask).astype(jnp.int32))
+        fixed, par2, counts = self._scrub(buf ^ mask, parity, mesh=mesh)
+        return fixed, par2, jnp.concatenate([injected[None], counts])
 
     def scrub_copies(self, bufs, parities,
                      mesh=None) -> Tuple[list, list, jax.Array]:
@@ -340,13 +381,56 @@ class DiagParityEcc(Scheme):
         """
         n = bufs[0].shape[0]
         nb = parities[0].shape[0]
-        fixed, par2, counts = self._op().scrub(
+        fixed, par2, counts = self._scrub(
             jnp.concatenate(arena.canonical_parts(list(bufs))),
             jnp.concatenate(arena.canonical_parts(list(parities))),
-            slopes=self.slopes, mesh=mesh)
+            mesh=mesh)
         return ([fixed[i * n:(i + 1) * n] for i in range(len(bufs))],
                 [par2[i * nb:(i + 1) * nb] for i in range(len(parities))],
                 counts)
+
+    def cost_events(self, base, profile, spec):
+        return tuple(base) + self._ecc_events(profile, spec)
+
+    checkpoint_redundancy = True
+
+
+@dataclasses.dataclass(frozen=True)
+class DiagParityEcc(ArenaEcc):
+    """Diagonal-parity word ECC over the packed arena (paper §IV).
+
+    Wraps the `core.arena` + `kernels/diag_parity` machinery behind the
+    scheme protocol; bit-exact against `core.reliability.ReliableStore`
+    (same pack, same encode, same fused scrub, same counts).  `impl`
+    overrides the `diag_parity` backend (None -> registry default).
+    Corrects one flipped bit per 32-word *block* at 3 parity words of
+    storage; multi-flip blocks are flagged uncorrectable.
+    """
+
+    slopes: Tuple[int, ...] = (1, 2, -1)
+    impl: Optional[str] = None
+    write_back: bool = False
+
+    code_name = "ecc"
+
+    @property
+    def n_parity_words(self) -> int:
+        return len(self.slopes)
+
+    def _op(self):
+        return backend.dispatch("diag_parity", self.impl)
+
+    def _encode(self, buf: jax.Array) -> jax.Array:
+        return self._op().encode(buf, slopes=self.slopes)
+
+    def _scrub(self, buf: jax.Array, parity: jax.Array, mesh=None):
+        return self._op().scrub(buf, parity, slopes=self.slopes, mesh=mesh)
+
+    def inject_scrub_arena(self, buf: jax.Array, parity: jax.Array,
+                           mask: jax.Array, mesh=None):
+        # diagonal parity has a dedicated fused corrupt+repair kernel
+        op = backend.dispatch("inject_scrub", self.impl)
+        return op(buf, parity, mask, slopes=self.slopes, mesh=mesh)
 
     def overhead(self) -> CostReport:
         # storage: len(slopes) parity words per 32-word block; latency: the
@@ -354,11 +438,56 @@ class DiagParityEcc(Scheme):
         return CostReport(storage_x=1.0 + len(self.slopes) / arena.BLOCK,
                           latency_x=1.26)
 
-    def cost_events(self, base, profile, spec):
+    def _ecc_events(self, profile, spec, copies: int = 1):
         from ..costmodel.compile import ecc_events
-        return tuple(base) + ecc_events(profile, spec, self.slopes)
+        return ecc_events(profile, spec, self.slopes, copies=copies)
 
-    checkpoint_redundancy = True
+
+@dataclasses.dataclass(frozen=True)
+class HsiaoSecDed(ArenaEcc):
+    """(39,32) Hsiao SEC-DED word code over the packed arena.
+
+    The second code of the zoo (kernels/hsiao_secded, DESIGN.md §18):
+    7 odd-weight-column check bits per 32-bit word, packed as 7 parity
+    words per block.  Every word decodes independently — one flip in
+    each of a block's 32 words is still corrected, where diagonal
+    parity corrects one flip per block — and double errors are
+    *detected* (reported uncorrectable through `ScrubReport`) instead
+    of silently miscorrected.  Storage 1+7/32 vs diag's 1+3/32, and a
+    denser encode tree (7 masked-parity families vs 3 rotate-XOR
+    slopes): higher coverage, higher maintenance tax.
+    """
+
+    impl: Optional[str] = None
+    write_back: bool = False
+
+    code_name = "hsiao"
+
+    @property
+    def n_parity_words(self) -> int:
+        from ..kernels.hsiao_secded.code import N_CHECKS
+        return N_CHECKS
+
+    def _op(self):
+        return backend.dispatch("hsiao_secded", self.impl)
+
+    def _encode(self, buf: jax.Array) -> jax.Array:
+        return self._op().encode(buf)
+
+    def _scrub(self, buf: jax.Array, parity: jax.Array, mesh=None):
+        return self._op().scrub(buf, parity, mesh=mesh)
+
+    def overhead(self) -> CostReport:
+        # 7 check bits per word of storage; latency follows the denser
+        # encode (7 families of masked parities vs 3 diagonal slopes —
+        # arXiv:2105.04212's Hamming-vs-parity gap), still well under
+        # any TMR discipline's 3x
+        return CostReport(storage_x=1.0 + 7.0 / arena.BLOCK,
+                          latency_x=1.42)
+
+    def _ecc_events(self, profile, spec, copies: int = 1):
+        from ..costmodel.compile import secded_events
+        return secded_events(profile, spec, copies=copies)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -471,8 +600,9 @@ class Tmr(Scheme):
 
 @dataclasses.dataclass(frozen=True)
 class Compose(Scheme):
-    """Joint configuration: per-copy diagonal-parity ECC under TMR voting
-    (the paper's combined long-term protection, §VI).
+    """Joint configuration: a per-copy arena word code under TMR voting
+    (the paper's combined long-term protection, §VI) — any `ArenaEcc`
+    (diagonal parity or Hsiao SEC-DED) composes identically.
 
     Each of the three copies carries its own parity table; `scrub` first
     runs the fused ECC scrub on every copy (correcting all single-bit
@@ -486,7 +616,7 @@ class Compose(Scheme):
     runtime's checkpoint-restore path).
     """
 
-    ecc: DiagParityEcc = DiagParityEcc()
+    ecc: ArenaEcc = DiagParityEcc()
     tmr: Tmr = Tmr()
 
     @property
@@ -495,7 +625,7 @@ class Compose(Scheme):
 
     def protect(self, payload: Any) -> Protected:
         buf, spec = arena.pack(payload)
-        parity = self.ecc._op().encode(buf, slopes=self.ecc.slopes)
+        parity = self.ecc._encode(buf)
         prot = Protected(payload, ((payload, payload),
                                    (parity, parity, parity)), self)
         prot._packed = (buf, spec)
@@ -515,7 +645,6 @@ class Compose(Scheme):
         # result is unpacked once.  Counts stay on device (no per-copy
         # Python accumulation).
         (c1, c2), (p0, p1, p2) = prot.redundancy
-        op = self.ecc._op()
         packed, spec = [], None
         for i, copy in enumerate((prot.payload, c1, c2)):
             buf, spec = prot._packed if i == 0 and prot._packed is not None \
@@ -525,7 +654,7 @@ class Compose(Scheme):
                                                 mesh=mesh)
         vbuf = self.tmr._vote()(*bufs)
         voted = arena.unpack(vbuf, spec)
-        vpar = op.encode(vbuf, slopes=self.ecc.slopes)
+        vpar = self.ecc._encode(vbuf)
         out = Protected(voted, ((voted, voted), (vpar, vpar, vpar)), self)
         out._packed = (vbuf, spec)
         d01, d02, d12 = (bufs[0] != bufs[1], bufs[0] != bufs[2],
@@ -566,33 +695,83 @@ class Compose(Scheme):
 
     def cost_events(self, base, profile, spec):
         # execution triplicates under the TMR discipline; each copy
-        # carries its own parity table, so the diagonal-parity traffic
-        # covers copies=3 blocks (scrub_copies fuses them in one pass)
-        from ..costmodel.compile import ecc_events, tmr_transform, \
-            vote_events
+        # carries its own parity table, so the word-code traffic covers
+        # copies=3 blocks (scrub_copies fuses them in one pass)
+        from ..costmodel.compile import tmr_transform, vote_events
         return (tmr_transform(base, self.tmr.discipline)
                 + vote_events(profile, spec)
-                + ecc_events(profile, spec, self.ecc.slopes, copies=3))
+                + self.ecc._ecc_events(profile, spec, copies=3))
 
 
 # --------------------------------------------------------------------------
-# scheme spec strings (serve --scheme, campaign grids)
+# scheme registry + spec strings (serve --scheme, campaign grids)
 # --------------------------------------------------------------------------
+#
+# One registry maps spec tokens to scheme factories; everything user-facing
+# (serve --scheme validation and help, campaign grids, SCHEME_CHOICES) is
+# derived from it, so a new code registered here appears everywhere at once.
 
-SCHEME_CHOICES = ("off", "ecc", "tmr-serial", "tmr-parallel", "tmr-semi",
-                  "ecc+tmr")
+_SCHEME_FACTORIES: "dict[str, Tuple[Any, str]]" = {}
+_SCHEME_ALIASES: "dict[str, str]" = {}
+
+
+def register_scheme(token: str, factory, help: str = "",
+                    aliases: Tuple[str, ...] = ()) -> None:
+    """Register `factory(impl) -> Scheme` under spec token `token`."""
+    _SCHEME_FACTORIES[token] = (factory, help)
+    for a in aliases:
+        _SCHEME_ALIASES[a] = token
+
+
+def scheme_choices() -> Tuple[str, ...]:
+    """Every registered spec token, plus the composition grammar (one
+    arena code + one TMR discipline joined by '+')."""
+    return tuple(_SCHEME_FACTORIES) + ("ecc+tmr", "hsiao+tmr")
+
+
+def scheme_help() -> str:
+    """One-line-per-token help text assembled from the registry (the
+    serve --scheme flag renders this, never a hardcoded list)."""
+    lines = [f"{tok}: {hlp}" for tok, (_, hlp) in _SCHEME_FACTORIES.items()]
+    lines.append("<code>+tmr[-<discipline>]: per-copy arena code under "
+                 "TMR voting (e.g. ecc+tmr-serial, hsiao+tmr)")
+    return "; ".join(lines)
+
+
+register_scheme("off", lambda impl: Unprotected(),
+                "no redundancy (baseline)", aliases=("none", "unprotected"))
+register_scheme("ecc", lambda impl: DiagParityEcc(impl=impl),
+                "diagonal-parity word code, 1 correction per 32-word block,"
+                " +3/32 storage")
+register_scheme("ecc-wb", lambda impl: DiagParityEcc(impl=impl,
+                                                     write_back=True),
+                "diagonal parity with write-back-on-read serving")
+register_scheme("hsiao", lambda impl: HsiaoSecDed(impl=impl),
+                "(39,32) Hsiao SEC-DED, per-word correct + double-error "
+                "detect, +7/32 storage")
+register_scheme("hsiao-wb", lambda impl: HsiaoSecDed(impl=impl,
+                                                     write_back=True),
+                "Hsiao SEC-DED with write-back-on-read serving")
 
 _TMR_ALIASES = {"serial": "serial", "parallel": "parallel",
                 "semi": "semi_parallel", "semi-parallel": "semi_parallel",
                 "semi_parallel": "semi_parallel"}
 
+for _disc, _canon in (("serial", "serial"), ("parallel", "parallel"),
+                      ("semi", "semi_parallel")):
+    register_scheme(
+        f"tmr-{_disc}",
+        lambda impl, d=_canon: Tmr(discipline=d, impl=impl),
+        f"triple modular redundancy, {_canon.replace('_', '-')} discipline")
+
+SCHEME_CHOICES = scheme_choices()
+
 
 def _parse_one(token: str, impl: Optional[str]) -> Scheme:
     token = token.strip().lower()
-    if token in ("off", "none", "unprotected"):
-        return Unprotected()
-    if token == "ecc":
-        return DiagParityEcc(impl=impl)
+    token = _SCHEME_ALIASES.get(token, token)
+    if token in _SCHEME_FACTORIES:
+        return _SCHEME_FACTORIES[token][0](impl)
     if token == "tmr" or token.startswith("tmr-"):
         disc = _TMR_ALIASES.get(token[4:] or "serial")
         if disc is None:
@@ -600,31 +779,38 @@ def _parse_one(token: str, impl: Optional[str]) -> Scheme:
                              f"(expected one of {sorted(_TMR_ALIASES)})")
         return Tmr(discipline=disc, impl=impl)
     raise ValueError(f"unknown scheme {token!r} "
-                     f"(expected one of {SCHEME_CHOICES})")
+                     f"(expected one of {scheme_choices()})")
 
 
-def standard_grid(impl: Optional[str] = None) -> Tuple[Scheme, ...]:
+def standard_grid(impl: Optional[str] = None,
+                  include_hsiao: bool = False) -> Tuple[Scheme, ...]:
     """The canonical sweep grid (every scheme family, all disciplines) —
-    shared by the campaign benchmarks so they all walk one design space."""
-    return (Unprotected(), DiagParityEcc(impl=impl),
+    shared by the campaign benchmarks so they all walk one design space.
+    `include_hsiao` extends it with the SEC-DED code zoo variants (solo
+    and composed with TMR) behind one flag."""
+    grid = (Unprotected(), DiagParityEcc(impl=impl),
             Tmr("serial", impl=impl), Tmr("parallel", impl=impl),
             Tmr("semi_parallel", impl=impl),
             Compose(DiagParityEcc(impl=impl), Tmr("serial", impl=impl)))
+    if include_hsiao:
+        grid += (HsiaoSecDed(impl=impl),
+                 Compose(HsiaoSecDed(impl=impl), Tmr("serial", impl=impl)))
+    return grid
 
 
 def parse_scheme(spec: str, impl: Optional[str] = None) -> Scheme:
-    """Parse a scheme spec string: ``off | ecc | tmr-<discipline> |
-    ecc+tmr[-<discipline>]`` with discipline in serial | parallel | semi.
-
-    `impl` threads a backend override into every constructed scheme.
-    """
+    """Parse a scheme spec string: any registered token (``off | ecc |
+    ecc-wb | hsiao | hsiao-wb | tmr-<discipline>``) or a composition
+    ``<code>+tmr[-<discipline>]`` with discipline serial | parallel |
+    semi.  `impl` threads a backend override into every constructed
+    scheme."""
     parts = [_parse_one(t, impl) for t in spec.split("+")]
     if len(parts) == 1:
         return parts[0]
     if len(parts) == 2:
-        eccs = [p for p in parts if isinstance(p, DiagParityEcc)]
+        eccs = [p for p in parts if isinstance(p, ArenaEcc)]
         tmrs = [p for p in parts if isinstance(p, Tmr)]
         if len(eccs) == 1 and len(tmrs) == 1:
             return Compose(ecc=eccs[0], tmr=tmrs[0])
     raise ValueError(f"cannot compose scheme spec {spec!r} "
-                     "(expected ecc+tmr[-<discipline>])")
+                     "(expected <code>+tmr[-<discipline>])")

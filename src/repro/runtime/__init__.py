@@ -1,4 +1,6 @@
+from .adaptive import AdaptiveScrub, AdaptiveScrubConfig
 from .monitor import HeartbeatMonitor, StragglerPolicy
 from .loop import TrainLoop, LoopConfig
 
-__all__ = ["HeartbeatMonitor", "StragglerPolicy", "TrainLoop", "LoopConfig"]
+__all__ = ["AdaptiveScrub", "AdaptiveScrubConfig", "HeartbeatMonitor",
+           "StragglerPolicy", "TrainLoop", "LoopConfig"]

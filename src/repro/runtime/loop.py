@@ -38,8 +38,10 @@ from ..core.reliability import ReliableStore, WordEccConfig
 from ..faults.models import FaultModel, TransientBitFlips
 from ..obs import NULL_TRACER, DriftDetector, ScrubMetrics, Tracer
 from ..reliability import backend
-from ..reliability.scheme import (Compose, DiagParityEcc, Protected, Scheme,
+from ..reliability.scheme import (ArenaEcc, Compose, DiagParityEcc,
+                                 Protected, Scheme,
                                   Tmr, parse_scheme)
+from .adaptive import AdaptiveScrub
 from .monitor import Decision, HeartbeatMonitor, StragglerPolicy
 
 __all__ = ["LoopConfig", "TrainLoop"]
@@ -61,6 +63,10 @@ class LoopConfig:
                                   # None -> DiagParityEcc() on attach_scheme()
     max_scrub_restores: int = 3   # consecutive scheme restores before giving up
                                   # and continuing with best-effort correction
+    adaptive_scrub: Any = None    # pay-as-you-fault cadence: an
+                                  # AdaptiveScrub instance, or True to build
+                                  # one from the injection prior on
+                                  # attach_scheme(); overrides scrub_every
 
 
 class TrainLoop:
@@ -91,6 +97,7 @@ class TrainLoop:
         self.eval_history: list = []
         self.scrub_reports: list = []
         self.scrub_trajectory = ScrubTrajectory()
+        self.adaptive: Optional[AdaptiveScrub] = None
         self.total_restores = 0
         self._consecutive_scrub_restores = 0
 
@@ -114,7 +121,8 @@ class TrainLoop:
         otherwise); scrubbing the view is bit-exact vs `scheme.scrub` —
         both run the same fused pass over the same arena+parity.
         """
-        if self.protected is None or not isinstance(self.scheme, DiagParityEcc):
+        if self.protected is None \
+                or not isinstance(self.scheme, DiagParityEcc):
             return None
         s = ReliableStore(self.protected.payload, self.protected.redundancy,
                           WordEccConfig(self.scheme.slopes),
@@ -141,12 +149,27 @@ class TrainLoop:
         p_bit = getattr(model, "p_bit", None)
         if p_bit and not getattr(model, "permanent", False) \
                 and self.monitor.drift is None \
-                and isinstance(self.scheme, (DiagParityEcc, Compose)):
+                and isinstance(self.scheme, (ArenaEcc, Compose)):
             # Compose scrubs three independently corrupted copies per
             # interval, so the expected event stream is 3x one arena's
             copies = 3 if isinstance(self.scheme, Compose) else 1
             self.monitor.drift = DriftDetector(
                 p_bit, self._n_blocks() * copies)
+        if self.cfg.adaptive_scrub and self.adaptive is None:
+            if isinstance(self.cfg.adaptive_scrub, AdaptiveScrub):
+                self.adaptive = self.cfg.adaptive_scrub
+            else:
+                # prior-seeded controller: the injection rate (if known)
+                # sizes interval0; the monitor's drift detector (if armed
+                # above) vetoes relaxation while corrections run hot
+                copies = 3 if isinstance(self.scheme,
+                                         (Tmr, Compose)) else 1
+                self.adaptive = AdaptiveScrub.from_prior(
+                    p_bit or 0.0, self._n_blocks() * copies,
+                    detector=self.monitor.drift,
+                    # record_scrub already feeds the shared detector
+                    feed_detector=False,
+                    interval0=max(1, self.cfg.scrub_every or 32))
 
     def _n_blocks(self) -> int:
         return arena.arena_spec(self.state["params"]).n_blocks
@@ -234,6 +257,11 @@ class TrainLoop:
                                                 report.uncorrectable)))
         self.scrub_trajectory.add(self.step, corrected, parity_fixed,
                                   uncorrectable)
+        if self.adaptive is not None:
+            # the controller reuses the SAME fetched triple (no extra
+            # sync); it reschedules the next scrub from these counts
+            self.adaptive.record(self.step, corrected, uncorrectable,
+                                 parity_fixed)
         injected = int(self.inject_fn is not None
                        or self._resolved_model() is not None)
         record = ScrubMetrics(
@@ -365,7 +393,11 @@ class TrainLoop:
                 self.tracer.counter("step_s", dt)
             if self.protected is not None:
                 self._refresh()
-                if c.scrub_every and self.step % c.scrub_every == 0:
+                due = (self.adaptive.due(self.step)
+                       if self.adaptive is not None
+                       else c.scrub_every
+                       and self.step % c.scrub_every == 0)
+                if due:
                     if self._scrub():
                         continue   # restored: step rolled back, re-enter loop
             if self.eval_fn is not None and c.eval_every \

@@ -1,0 +1,268 @@
+"""The pay-as-you-fault scrub controller (DESIGN.md §18): the hysteresis
+law (halve on storms/uncorrectables, double only after a patience streak
+of quiet scrubs), the drift-detector veto on relaxation, prior seeding
+from the closed-form fault model and from recorded trajectories, strict
+replay determinism, and the serving/training integrations — a batcher
+under fault storms converges its interval DOWN, a quiet one backs off
+UP, and a forced-schedule replay of an adaptive run's realized scrub
+ticks reproduces its tokens bit for bit."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.faults import TransientBitFlips
+from repro.launch import BatchSpec, ContinuousBatcher, Request
+from repro.models import params as P
+from repro.models import transformer as T
+from repro.obs import DriftDetector
+from repro.reliability import parse_scheme
+from repro.runtime import (AdaptiveScrub, AdaptiveScrubConfig, LoopConfig,
+                           TrainLoop)
+
+CFG = AdaptiveScrubConfig(interval0=8, min_interval=1, max_interval=64,
+                          low_events=0.5, high_events=4.0, patience=2)
+
+
+# -- the law ------------------------------------------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        AdaptiveScrubConfig(interval0=4, min_interval=8)
+    with pytest.raises(ValueError):
+        AdaptiveScrubConfig(interval0=8, max_interval=4)
+    with pytest.raises(ValueError):
+        AdaptiveScrubConfig(low_events=5.0, high_events=1.0)
+    with pytest.raises(ValueError):
+        AdaptiveScrubConfig(patience=0)
+
+
+def test_storm_halves_immediately_and_clamps():
+    ctl = AdaptiveScrub(CFG)
+    assert ctl.due(8) and not ctl.due(7)
+    for i, want in zip(range(5), (4, 2, 1, 1, 1)):   # clamped at floor
+        ctl.record(10 * i, corrected=10)             # events=10 > high=4
+        assert ctl.interval == want
+    assert ctl.next_due == 40 + 1
+
+
+def test_any_uncorrectable_slams_regardless_of_band():
+    ctl = AdaptiveScrub(CFG)
+    ctl.record(0, corrected=0, uncorrectable=1)      # events=2, mid-band
+    assert ctl.interval == 4                         # ...but still halves
+
+
+def test_quiet_streak_doubles_after_patience_and_clamps():
+    ctl = AdaptiveScrub(CFG)
+    intervals = [ctl.record(i, corrected=0) for i in range(12)]
+    # patience=2: holds, doubles, holds, doubles ... then rails at 64
+    assert intervals == [8, 16, 16, 32, 32, 64, 64, 64, 64, 64, 64, 64]
+
+
+def test_hysteresis_mid_band_resets_quiet_streak():
+    ctl = AdaptiveScrub(CFG)
+    ctl.record(0, corrected=0)                       # quiet 1/2
+    ctl.record(8, corrected=2)                       # mid-band: reset
+    ctl.record(16, corrected=0)                      # quiet 1/2 again
+    assert ctl.interval == 8                         # never lengthened
+    ctl.record(24, corrected=0)                      # quiet 2/2
+    assert ctl.interval == 16
+
+
+def test_parity_fixed_never_moves_the_interval():
+    ctl = AdaptiveScrub(CFG)
+    ctl.record(0, corrected=0, parity_fixed=100)
+    ctl.record(8, corrected=0, parity_fixed=100)
+    assert ctl.interval == 16      # counted as quiet despite parity heals
+
+
+def test_replay_determinism():
+    """Same (index, counts) stream -> bit-identical schedule and history;
+    `due` is pure."""
+    stream = [(0, 3, 0), (8, 0, 0), (16, 0, 0), (32, 9, 1), (34, 0, 0)]
+    a, b = AdaptiveScrub(CFG), AdaptiveScrub(CFG)
+    for idx, c, u in stream:
+        assert a.due(idx) == b.due(idx) == a.due(idx)
+        a.record(idx, c, u)
+        b.record(idx, c, u)
+    assert a.history == b.history and a.next_due == b.next_due
+    assert a.summary() == b.summary()
+
+
+# -- priors -------------------------------------------------------------------
+
+def test_from_prior_sizes_interval_to_target_events():
+    # hot prior -> short interval; cold prior -> long; zero -> default
+    hot = AdaptiveScrub.from_prior(1e-3, 1024, max_interval=1024)
+    cold = AdaptiveScrub.from_prior(1e-7, 64, max_interval=1024)
+    assert hot.interval < cold.interval
+    assert cold.interval <= 1024 and hot.interval >= 1
+    assert AdaptiveScrub.from_prior(0.0, 1024).interval == \
+        AdaptiveScrubConfig().interval0
+
+
+def test_from_trajectory_prior():
+    from repro.core.analytics import ScrubTrajectory
+    traj = ScrubTrajectory(n_blocks=64)
+    for step in range(0, 40, 4):
+        traj.add(step, 8, 0, 0)                      # 2 events/step
+    ctl = AdaptiveScrub.from_trajectory(traj, target_events=2.0)
+    assert ctl.interval == 1                         # hot history
+    quiet = ScrubTrajectory(n_blocks=64)
+    for step in range(0, 4000, 400):
+        quiet.add(step, 1, 0, 0)
+    assert AdaptiveScrub.from_trajectory(quiet).interval > 100
+
+
+# -- drift-detector gate ------------------------------------------------------
+
+def test_hot_detector_vetoes_relaxation():
+    det = DriftDetector(1e-7, 4)                     # expects ~nothing
+    ctl = AdaptiveScrub(CFG, detector=det, feed_detector=True)
+    # sustained unexplained corrections: detector runs hot with evidence
+    for i in range(10):
+        ctl.record(i * 8, corrected=1)               # 1 < high, >= low
+    assert det.status().hot
+    # a lucky quiet streak must NOT lengthen while the verdict is hot
+    iv = ctl.interval
+    for i in range(10, 16):
+        ctl.record(i * 8, corrected=0)
+    assert ctl.interval == iv
+    # detector cools off (on-model silence drains the window), veto lifts
+    for i in range(16, 80):
+        ctl.record(i * 8, corrected=0)
+    assert ctl.interval > iv
+
+
+def test_feed_detector_false_never_ingests():
+    det = DriftDetector(1e-3, 10)
+    ctl = AdaptiveScrub(CFG, detector=det, feed_detector=False)
+    for i in range(6):
+        ctl.record(i * 8, corrected=50)
+    assert det.status().n_scrubs == 0                # untouched
+
+
+def test_drift_evidence_floor_boundary():
+    """The `confident` accessor at the exact floor: evidence() counts
+    max(observed, expected) per scrub, and the verdict unlocks on the
+    scrub that reaches min_events — not one earlier."""
+    det = DriftDetector(1e-7, 4, min_events=5.0)
+    assert det.evidence() == 0.0 and not det.confident
+    for _ in range(4):
+        det.observe(1)
+    assert det.evidence() == pytest.approx(4.0) and not det.confident
+    assert not det.status().hot                      # floor not reached
+    det.observe(1)
+    assert det.evidence() == pytest.approx(5.0) and det.confident
+    assert det.status().hot                          # ...and now it is
+
+
+# -- serving integration ------------------------------------------------------
+
+def _serving_setup():
+    cfg = get_config("phi3-mini-3.8b").smoke().replace(
+        n_layers=1, d_model=16, n_heads=2, n_kv=2, d_ff=32, vocab=512)
+    key = jax.random.PRNGKey(0)
+    params = P.materialize(key, T.model_specs(cfg))
+    spec = BatchSpec(slots=2, page_tokens=8, chunk=2, prompt_buckets=(4,),
+                     gen_cap=16)
+    prompt = np.asarray(jax.random.randint(jax.random.fold_in(key, 3),
+                                           (4,), 0, cfg.vocab))
+    reqs = [Request(i, prompt, 14, arrival_s=0.0) for i in range(4)]
+    return cfg, key, params, spec, reqs
+
+
+def _batcher(cfg, key, params, spec, *, adaptive=None, scrub_every=0,
+             forced=None, p_bit=0.0):
+    b = ContinuousBatcher(cfg, parse_scheme("hsiao"), spec,
+                          scrub_every=scrub_every, adaptive=adaptive,
+                          forced_scrub_ticks=forced)
+    b.prepare(params, key=key)
+    if p_bit > 0:
+        fault = TransientBitFlips(p_bit)
+        k0 = jax.random.PRNGKey(99)
+
+        def inject(bb):
+            bb.pool.corrupt(jax.random.fold_in(k0, bb.ticks), fault)
+        b.on_tick = inject
+    return b
+
+
+def test_batcher_interval_backs_off_when_quiet():
+    cfg, key, params, spec, reqs = _serving_setup()
+    ctl = AdaptiveScrub(AdaptiveScrubConfig(
+        interval0=1, max_interval=64, patience=1))
+    b = _batcher(cfg, key, params, spec, adaptive=ctl)
+    b.run(reqs)
+    assert ctl.interval > 1 and len(b.scrub_ticks) >= 2
+    # scrub cadence actually sparsified: gaps grow along the run
+    gaps = np.diff(b.scrub_ticks)
+    assert len(gaps) == 0 or gaps[-1] >= gaps[0]
+
+
+def test_batcher_interval_slams_under_fault_storm():
+    cfg, key, params, spec, reqs = _serving_setup()
+    ctl = AdaptiveScrub(AdaptiveScrubConfig(
+        interval0=8, min_interval=1, max_interval=64, patience=1))
+    b = _batcher(cfg, key, params, spec, adaptive=ctl, p_bit=5e-3)
+    b.run(reqs)
+    assert ctl.interval < 8                          # storms shortened it
+    assert any(e > ctl.cfg.high_events for _, e, _ in ctl.history)
+
+
+def test_forced_replay_is_bit_exact_with_adaptive_run():
+    """The replay contract end to end: record an adaptive run's realized
+    scrub ticks, then re-serve with that exact schedule forced and no
+    controller — tokens must match bit for bit (same launches, same
+    order), and the forced schedule must override everything else."""
+    cfg, key, params, spec, reqs = _serving_setup()
+    ctl = AdaptiveScrub(AdaptiveScrubConfig(
+        interval0=1, max_interval=32, patience=1))
+    ba = _batcher(cfg, key, params, spec, adaptive=ctl, p_bit=1e-3)
+    res_a = {r.rid: r.tokens for r in ba.run(reqs)}
+    assert ba.scrub_ticks, "adaptive run never scrubbed"
+
+    br = _batcher(cfg, key, params, spec, forced=ba.scrub_ticks,
+                  scrub_every=3, p_bit=1e-3)         # scrub_every ignored
+    res_r = {r.rid: r.tokens for r in br.run(reqs)}
+    assert br.scrub_ticks == ba.scrub_ticks
+    for rid in res_a:
+        np.testing.assert_array_equal(res_r[rid], res_a[rid])
+
+
+# -- training integration -----------------------------------------------------
+
+def test_train_loop_arms_and_drives_adaptive(tmp_path):
+    from repro.checkpoint import Checkpointer
+
+    def train_step(state, batch):
+        p = state["params"]["w"] - 0.1 * batch.mean()
+        return {"params": {"w": p}}, {"loss": jnp.abs(p).sum()}
+
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    cfg = LoopConfig(total_steps=24, checkpoint_every=100, log_every=0,
+                     scrub_every=2, scheme=parse_scheme("hsiao"),
+                     inject_p_bit=1e-4, adaptive_scrub=True)
+    tl = TrainLoop(train_step, {"params": {"w": jnp.ones(64)}},
+                   lambda s: jnp.full((4,), float(s % 3)),
+                   cfg, ckpt=ck, log=lambda *_: None)
+    tl.attach_scheme()
+    tl.run()
+    assert tl.adaptive is not None and tl.adaptive.history
+    # the controller owns cadence: scrubs landed at ITS schedule
+    idxs = [i for i, _, _ in tl.adaptive.history]
+    assert idxs == sorted(idxs) and len(idxs) >= 2
+    # an explicit controller instance is honored as-is
+    ctl = AdaptiveScrub(AdaptiveScrubConfig(interval0=4))
+    cfg2 = LoopConfig(total_steps=8, checkpoint_every=100, log_every=0,
+                      scheme=parse_scheme("hsiao"), adaptive_scrub=ctl)
+    tl2 = TrainLoop(train_step, {"params": {"w": jnp.ones(64)}},
+                    lambda s: jnp.full((4,), float(s % 3)),
+                    cfg2, ckpt=Checkpointer(str(tmp_path / "b"), keep=2,
+                                            async_save=False),
+                    log=lambda *_: None)
+    tl2.attach_scheme()
+    tl2.run()
+    assert tl2.adaptive is ctl
